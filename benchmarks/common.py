@@ -1,0 +1,39 @@
+"""Benchmark utilities: timing + CSV emission.
+
+CPU wall-clock numbers are DIRECTIONAL ONLY (the paper measured V100s;
+this container is one CPU core) — every table also emits the structural
+metric that transfers to TPU (bytes moved / FLOPs / layout effect ratios),
+derived from the loop-aware HLO analysis where relevant.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
+    """Median wall-time per call in ms (jit-compatible: blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append((time.perf_counter() - t0) * 1e3)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Csv:
+    def __init__(self, *cols: str):
+        self.cols = cols
+        self.rows: list[tuple] = []
+        print(",".join(cols), flush=True)
+
+    def row(self, *vals) -> None:
+        vals = tuple(f"{v:.4f}" if isinstance(v, float) else str(v)
+                     for v in vals)
+        self.rows.append(vals)
+        print(",".join(vals), flush=True)

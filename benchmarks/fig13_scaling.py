@@ -1,0 +1,96 @@
+"""Paper Figs 12/13 — Euler 2D shock-bubble weak/strong scaling.
+
+On this container all fake devices share ONE CPU core, so wall time does
+NOT show parallel speedup; the transferable metrics are (a) the per-device
+collective bytes (halo traffic) as the device count grows and (b) the
+halo-to-compute byte ratio, which determines the TPU scaling efficiency
+(halo bytes / ICI bw vs compute bytes / HBM bw).  Runs in a subprocess
+with 8 virtual devices.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import Csv
+
+_CHILD = r"""
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.analysis import analyze_hlo
+from repro.core import (Boundary, DistTensor, Executor, Graph, Layout,
+                        RecordArray, concurrent_padded_access, make_mesh)
+from repro.physics.euler import EULER_SPEC, shock_bubble_init, update_dim
+
+def build(nx, ny, n_dev, steps):
+    mesh = make_mesh((n_dev,), ("gy",))
+    ux = DistTensor("u", (nx, ny), spec=EULER_SPEC, layout=Layout.SOA,
+                    partition=(None, "gy"), halo=(1, 0),
+                    boundary=Boundary.TRANSMISSIVE)
+    uy = ux.with_(halo=(0, 1))
+    lam = 1e-3
+    gx = Graph(); gy_ = Graph()
+    gx.split(lambda rec: RecordArray(update_dim(rec.data, 0, lam),
+                                     EULER_SPEC, Layout.SOA),
+             concurrent_padded_access(ux), writes=(0,))
+    gy_.split(lambda rec: RecordArray(update_dim(rec.data, 1, lam),
+                                      EULER_SPEC, Layout.SOA),
+              concurrent_padded_access(uy), writes=(0,), overlap=True)
+    g = Graph(); g.emplace(gx); g.then(gy_)
+    ex = Executor(g, mesh=mesh)
+    return ex
+
+out = []
+base = 128
+for mode in ("weak", "strong"):
+    for n_dev in (1, 2, 4, 8):
+        if mode == "weak":
+            nx, ny = base, base * n_dev   # constant cells per device
+        else:
+            nx, ny = base, base * 8       # fixed global problem
+        ex = build(nx, ny, n_dev, 1)
+        state = ex.init_state(u=shock_bubble_init(nx, ny))
+        # one warm step, then timed steps
+        state = ex(state)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            state = ex(state)
+        jax.block_until_ready(jax.tree.leaves(state))
+        dt = (time.perf_counter() - t0) / 5 * 1e3
+        # structural: collective bytes per device from the compiled segment
+        fn = ex._jitted[0]
+        txt = fn.lower(state).compile().as_text()
+        a = analyze_hlo(txt)
+        out.append(dict(mode=mode, n_dev=n_dev, nx=nx, ny=ny,
+                        ms_per_step=dt,
+                        halo_bytes_per_dev=a["collective_link_bytes"],
+                        hlo_bytes_per_dev=a["bytes"]))
+print("JSON" + json.dumps(out))
+"""
+
+
+def main() -> None:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    if res.returncode != 0:
+        print(res.stdout)
+        print(res.stderr)
+        raise RuntimeError("fig13 child failed")
+    data = json.loads(res.stdout.split("JSON", 1)[1])
+    csv = Csv("mode", "devices", "grid", "ms_per_step(1-core-caveat)",
+              "halo_bytes_per_dev", "hlo_bytes_per_dev", "halo_fraction")
+    for r in data:
+        frac = r["halo_bytes_per_dev"] / max(r["hlo_bytes_per_dev"], 1)
+        csv.row(r["mode"], r["n_dev"], f"{r['nx']}x{r['ny']}",
+                r["ms_per_step"], int(r["halo_bytes_per_dev"]),
+                int(r["hlo_bytes_per_dev"]), frac)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Roofline analysis over the dry-run records (EXPERIMENTS.md §Roofline).
+
+Reads the JSON written by ``python -m repro.launch.dryrun --all --out X``
+and derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs / peak_FLOP/s              (per chip)
+  memory term     = HLO_bytes / HBM_bw                   (per chip)
+  collective term = collective_link_bytes / link_bw      (per chip)
+
+Hardware constants (TPU v5e class, per the brief): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.  The dominant term is the bottleneck;
+MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train cells gives
+the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s
+LINK_BW = 50e9          # bytes/s/link (ICI); pod axis rides DCN (slower)
+
+# active params per token (N or N_active), from configs at import time
+def _active_params():
+    import repro.configs as C
+    from repro.models.lm import param_count
+    out = {}
+    for arch in C.ARCH_IDS:
+        cfg = C.get(arch)
+        n = param_count(cfg, tp=1)
+        if cfg.n_experts:
+            # active = total - (all experts) + (top_k experts + dense)
+            per_expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_layers
+            n_active = n - cfg.n_experts * per_expert \
+                + cfg.top_k * per_expert
+            out[arch] = (n, n_active)
+        else:
+            out[arch] = (n, n)
+    return out
+
+
+def terms(rec: dict) -> dict:
+    t_c = rec["flops"] / PEAK_FLOPS
+    t_m = rec["bytes_accessed"] / HBM_BW
+    t_l = rec["collective_link_bytes"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_l),
+              key=lambda kv: kv[1])
+    bound = max(t_c, t_m, t_l)
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+            "dominant": dom[0], "step_lower_bound_s": bound,
+            "roofline_fraction": t_c / bound if bound > 0 else 0.0}
+
+
+def model_flops(arch: str, shape_name: str, devices: int,
+                active: dict) -> float:
+    from repro.models.config import SHAPES
+    shape = SHAPES[shape_name]
+    n, n_active = active[arch]
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens / devices
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens / devices
+    return 2.0 * n_active * shape.global_batch / devices  # decode: 1 token
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", default="dryrun_results.json")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    with open(args.records) as f:
+        recs = json.load(f)
+    active = _active_params()
+    rows = []
+    hdr = (f"{'arch':24s} {'shape':11s} {'mesh':8s} {'compute_s':>9s} "
+           f"{'memory_s':>9s} {'collect_s':>9s} {'bound':>10s} "
+           f"{'MF/HLO':>7s} {'roofl%':>7s}")
+    print(hdr)
+    for rec in recs:
+        if not rec.get("ok"):
+            print(f"{rec['arch']:24s} {rec['shape']:11s} {rec['mesh']:8s} "
+                  f"FAILED: {rec.get('error', '?')[:60]}")
+            continue
+        t = terms(rec)
+        mf = model_flops(rec["arch"], rec["shape"], rec["devices"], active)
+        ratio = mf / rec["flops"] if rec["flops"] else 0.0
+        rows.append({**rec, **t, "model_flops": mf, "useful_ratio": ratio})
+        print(f"{rec['arch']:24s} {rec['shape']:11s} {rec['mesh']:8s} "
+              f"{t['compute_s']:9.3f} {t['memory_s']:9.3f} "
+              f"{t['collective_s']:9.3f} {t['dominant']:>10s} "
+              f"{ratio:7.2f} {t['roofline_fraction']*100:6.1f}%")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

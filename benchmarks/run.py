@@ -1,0 +1,46 @@
+"""Run every paper-table benchmark (small default sizes; CPU-feasible).
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    args = ap.parse_args(argv)
+
+    from . import (fig13_scaling, table2_saxpy, table3_particle, table4_flux,
+                   table5_eikonal)
+    jobs = [
+        ("Table 2 (SAXPY)", lambda: table2_saxpy.main(
+            sizes=(1 << 18, 1 << 20) if not args.full
+            else (1 << 20, 10 << 20, 100 << 20))),
+        ("Table 3 (particle)", lambda: table3_particle.main(
+            sizes=(65_536, 262_144) if not args.full
+            else (100_000, 1_000_000, 10_000_000))),
+        ("Table 4 (FORCE flux)", lambda: table4_flux.main(
+            sizes=((128, 128),) if not args.full
+            else ((1024, 1024), (2048, 2048)))),
+        ("Table 5 (eikonal FIM)", lambda: table5_eikonal.main(
+            sizes=(128,) if not args.full else (1024, 2048))),
+        ("Fig 13 (Euler scaling)", fig13_scaling.main),
+    ]
+    failed = 0
+    for name, fn in jobs:
+        print(f"\n=== {name} ===")
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+    print(f"\n[benchmarks] {len(jobs) - failed}/{len(jobs)} suites OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

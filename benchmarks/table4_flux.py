@@ -1,0 +1,45 @@
+"""Paper Table 4 — 2-D FORCE flux difference: stencil + layout + VMEM
+staging.  Layout effect measured on the pure-jnp path (HLO bytes) and the
+Pallas path block-shape knob (the paper's one-line memory-space config).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import analyze_hlo
+from repro.core import Boundary, Layout, RecordArray, pad_boundary_only
+from repro.kernels.stencil.ops import flux_difference
+from repro.physics.euler import EULER_SPEC, shock_bubble_init
+from .common import Csv, time_fn
+
+
+def _haloed(nx, ny, layout):
+    U = shock_bubble_init(nx, ny)
+    d = U
+    for ax in (1, 2):
+        d = pad_boundary_only(d, axis=ax, width=1,
+                              boundary=Boundary.TRANSMISSIVE)
+    rec = RecordArray(d, EULER_SPEC, Layout.SOA)
+    return rec if layout is Layout.SOA else rec.with_layout(Layout.AOS)
+
+
+def main(sizes=((256, 256), (512, 512))) -> None:
+    csv = Csv("size", "layout", "pallas_cpu_ms", "jnp_cpu_ms", "hlo_bytes",
+              "hlo_flops")
+    for nx, ny in sizes:
+        for layout in (Layout.SOA,):
+            hal = _haloed(nx, ny, layout)
+            tp = time_fn(flux_difference, hal, 0.1, 0.1, iters=3)
+            tj = time_fn(flux_difference, hal, 0.1, 0.1, use_pallas=False,
+                         iters=3)
+            comp = jax.jit(
+                lambda h: flux_difference(h, 0.1, 0.1, use_pallas=False)
+            ).lower(hal).compile()
+            a = analyze_hlo(comp.as_text())
+            csv.row(f"{nx}x{ny}", layout.name, tp, tj, int(a["bytes"]),
+                    int(a["flops"]))
+
+
+if __name__ == "__main__":
+    main()

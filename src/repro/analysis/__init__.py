@@ -1,0 +1,5 @@
+"""Compiled-HLO analysis: loop-aware FLOPs / bytes / collective census."""
+
+from .hlo import HloCostModel, analyze_hlo
+
+__all__ = ["HloCostModel", "analyze_hlo"]

@@ -1,0 +1,65 @@
+"""Assigned-architecture registry: ``get(name)`` -> full ModelConfig,
+``get_smoke(name)`` -> reduced same-family config for CPU smoke tests.
+
+Every module defines ``config()`` (exact published config from the
+assignment table) and ``smoke()`` (small layers/width/experts, same layer
+pattern and feature flags, runnable on one CPU device).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import (ALL_SHAPES, SHAPES, ModelConfig, ShapeCfg,
+                                 shapes_for)
+
+ARCH_IDS = (
+    "llava_next_mistral_7b",
+    "seamless_m4t_medium",
+    "qwen1_5_4b",
+    "chatglm3_6b",
+    "qwen3_8b",
+    "gemma3_12b",
+    "mamba2_130m",
+    "arctic_480b",
+    "phi3_5_moe",
+    "recurrentgemma_9b",
+)
+
+# CLI aliases (the assignment's hyphenated ids)
+ALIASES = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen3-8b": "qwen3_8b",
+    "gemma3-12b": "gemma3_12b",
+    "mamba2-130m": "mamba2_130m",
+    "arctic-480b": "arctic_480b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "phi3.5-moe": "phi3_5_moe",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+
+def _module(name: str):
+    key = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; know {list(ARCH_IDS)}")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).smoke()
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCH_IDS}
+
+
+__all__ = ["ARCH_IDS", "ALIASES", "get", "get_smoke", "all_configs",
+           "ModelConfig", "ShapeCfg", "SHAPES", "ALL_SHAPES", "shapes_for"]

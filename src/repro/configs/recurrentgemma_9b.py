@@ -1,0 +1,48 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000, RG-LRU + local attention 1:2  [arXiv:2402.19427].
+
+Pattern (R,R,A): 12 scanned triples + a (R,R) tail = 38 layers.  Attention
+layers are LOCAL (window 2048, MQA kv=1 replicated); recurrent layers are
+RG-LRU (lru_width 4096, block-diagonal gates over 16 blocks) computed with
+an associative scan.  Gemma conventions ((1+w) norm, sqrt(d) embed scale,
+GEGLU, tied head); RoPE on half the head dim (Griffin).
+``long_500k`` RUNS (constant-size RG-LRU state + 2048-slot ring caches).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma_9b",
+        family="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab_size=256000,
+        pattern=("R", "R", "L"),
+        window=2048,
+        rope_base=10_000.0,
+        rope_fraction=0.5,
+        lru_width=4096,
+        rnn_blocks=16,
+        norm_plus_one=True,
+        scale_embed=True,
+        mlp_kind="geglu",
+        act="gelu",
+        tie_embeddings=True,
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        supports_long_context=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().with_(
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab_size=256, window=16, lru_width=64, rnn_blocks=4,
+        param_dtype="float32", compute_dtype="float32",
+        attn_impl="chunked", q_chunk=16, k_chunk=16, remat="none")

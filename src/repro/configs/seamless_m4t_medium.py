@@ -1,0 +1,45 @@
+"""seamless-m4t-medium [audio] — encoder-decoder, multimodal (arXiv:2308.11596).
+
+12L d_model=1024 16H (MHA kv=16) d_ff=4096 vocab=256206
+
+Backbone only, per the brief: the speech frontend is a STUB supplying
+precomputed frame embeddings (dim 1024) to the encoder; the text decoder
+carries the assigned shapes (decode shapes lower the *decoder* step against
+a frozen encoder cache).  Deviations noted in DESIGN.md: sinusoidal
+positions -> RoPE.  ``long_500k`` SKIPPED (full attention).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless_m4t_medium",
+        family="encdec",
+        n_layers=12,                 # decoder
+        enc_layers=12,               # encoder
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=256206,
+        norm_kind="layernorm",
+        norm_eps=1e-5,
+        mlp_kind="mlp",
+        act="gelu",
+        qkv_bias=True,
+        tie_embeddings=True,
+        frontend_dim=1024,           # speech-encoder hidden (stub)
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        supports_long_context=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().with_(
+        n_layers=2, enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=256, frontend_dim=32,
+        param_dtype="float32", compute_dtype="float32",
+        attn_impl="chunked", q_chunk=16, k_chunk=16, remat="none")

@@ -1,0 +1,45 @@
+"""Ripple core — polymorphic layout, distributed tensors, halo exchange,
+graph DAG + executor (the paper's C1-C6, see DESIGN.md)."""
+
+from .layout import (
+    Field,
+    Layout,
+    RecordArray,
+    RecordRef,
+    RecordSpec,
+    Vector,
+    block_spec_for,
+)
+from .halo import Boundary, exchange, halo_blocks, interior, pad_boundary_only, unpad
+from .tensor import DistTensor, ReductionResult, make_reduction_result
+from .graph import (
+    AccessMode,
+    ExecutionKind,
+    Graph,
+    MaxReducer,
+    MinReducer,
+    Node,
+    Reducer,
+    SumReducer,
+    TensorArg,
+    concurrent_padded_access,
+    concurrent_padded_access_in_shared,
+    exclusive_padded_access,
+    exclusive_padded_access_in_shared,
+    in_shared,
+)
+from .executor import Executor, execute, make_mesh
+
+__all__ = [
+    "Field", "Layout", "RecordArray", "RecordRef", "RecordSpec", "Vector",
+    "block_spec_for",
+    "Boundary", "exchange", "halo_blocks", "interior", "pad_boundary_only",
+    "unpad",
+    "DistTensor", "ReductionResult", "make_reduction_result",
+    "AccessMode", "ExecutionKind", "Graph", "MaxReducer", "MinReducer",
+    "Node", "Reducer", "SumReducer", "TensorArg",
+    "concurrent_padded_access", "concurrent_padded_access_in_shared",
+    "exclusive_padded_access", "exclusive_padded_access_in_shared",
+    "in_shared",
+    "Executor", "execute", "make_mesh",
+]

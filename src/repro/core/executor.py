@@ -1,0 +1,504 @@
+"""Graph executor (paper §6) — compiles a Ripple Graph to jitted SPMD code.
+
+The paper schedules graph nodes dynamically with a heterogeneous
+work-stealing pool.  Under SPMD/XLA that role collapses into *lowering
+decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
+
+* consecutive device levels are fused into one jit *segment* so XLA's
+  latency-hiding scheduler can overlap collectives with compute across the
+  paper's level boundaries (the paper's "compact GPU pipelines");
+* a segment with partitioned tensors is lowered through one ``shard_map``
+  — the paper's one-node-per-partition becomes one program per shard;
+* ``concurrent_padded_access`` + ``overlap=True`` splits the stencil into
+  interior/boundary programs so the halo ppermute flies during interior
+  compute (paper Fig. 7);
+* ``exclusive_padded_access`` captures the pre-update halo first and
+  threads it as a data dependency (paper Fig. 9's extra edges);
+* host (Cpu) nodes and ``sync()`` break segments — the host work runs
+  between jit calls (heterogeneous execution);
+* a graph with ``conditional`` becomes a ``lax.while_loop`` (device) or a
+  host do/while (if it contains host nodes);
+* state buffers are donated to each segment (the paper's allocator-reuse,
+  C6): steps update state in place.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import halo as halo_lib
+from .graph import AccessMode, ExecutionKind, Graph, Node
+from .layout import RecordArray
+from .tensor import DistTensor, ReductionResult
+
+__all__ = ["Executor", "execute", "make_mesh"]
+
+
+def make_mesh(shape, axis_names) -> Mesh:
+    """make_mesh with JAX<->0.9 compatible Auto axis types."""
+    return jax.make_mesh(
+        tuple(shape),
+        tuple(axis_names),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)),
+    )
+
+
+@dataclass
+class _HaloEntry:
+    dim: int
+    storage_axis: int
+    width: int
+    mesh_axis: Optional[str]  # None -> boundary-pad only
+
+
+def _halo_plan(t: DistTensor, mesh: Optional[Mesh]) -> list[_HaloEntry]:
+    plan = []
+    for d, w in enumerate(t.halo):
+        if w == 0:
+            continue
+        ax = t.partition[d]
+        if mesh is None or ax is None or mesh.shape[ax] == 1:
+            plan.append(_HaloEntry(d, t.storage_axis(d), w, None))
+        else:
+            plan.append(_HaloEntry(d, t.storage_axis(d), w, ax))
+    return plan
+
+
+def _apply_halo(data: jax.Array, t: DistTensor, mesh: Optional[Mesh]) -> jax.Array:
+    for e in _halo_plan(t, mesh):
+        if e.mesh_axis is None:
+            data = halo_lib.pad_boundary_only(
+                data, axis=e.storage_axis, width=e.width,
+                boundary=t.boundary, constant=t.boundary_constant)
+        else:
+            data = halo_lib.exchange(
+                data, axis=e.storage_axis, width=e.width, axis_name=e.mesh_axis,
+                boundary=t.boundary, constant=t.boundary_constant)
+    return data
+
+
+def _slice(x, axis, start, size):
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(start, start + size)
+    return x[tuple(idx)]
+
+
+class Executor:
+    """Compile + run a Graph against an optional mesh."""
+
+    def __init__(self, graph: Graph, mesh: Optional[Mesh] = None,
+                 donate: bool = True):
+        self.graph = graph
+        self.mesh = mesh
+        self.donate = donate
+        self.tensors = graph.all_tensors()
+        self.results = graph.all_results()
+        if mesh is not None:
+            for t in self.tensors.values():
+                t.validate_mesh(mesh)
+        self._segments = self._build_segments(graph)
+        self._jitted: dict[int, Callable] = {}
+
+    # -- state management ------------------------------------------------
+    def init_state(self, **overrides) -> dict[str, Any]:
+        """Allocate all tensors/results (zeros unless overridden)."""
+        state: dict[str, Any] = {}
+        for name, t in self.tensors.items():
+            if name in overrides:
+                v = overrides[name]
+                data = v.data if isinstance(v, RecordArray) else jnp.asarray(v)
+                if self.mesh is not None:
+                    data = jax.device_put(data, t.sharding(self.mesh))
+                state[name] = data
+            else:
+                v = t.init(self.mesh)
+                state[name] = v.data if isinstance(v, RecordArray) else v
+        for name, r in self.results.items():
+            state[name] = jnp.asarray(r.init, dtype=r.dtype)
+        return state
+
+    def state_shardings(self, state: dict) -> dict:
+        if self.mesh is None:
+            return {k: None for k in state}
+        out = {}
+        for k in state:
+            t = self.tensors.get(k)
+            spec = t.pspec() if t is not None else P()
+            out[k] = NamedSharding(self.mesh, spec)
+        return out
+
+    def read(self, state: dict, t: DistTensor):
+        """Wrap a state entry back into its RecordArray view."""
+        return t.wrap(state[t.name])
+
+    # -- segmentation ------------------------------------------------------
+    def _build_segments(self, graph: Graph):
+        """Split levels into host/device segments.
+
+        Returns a list of ('device', [levels...]) / ('host', node) /
+        ('loop', subgraph) entries.  Subgraphs without conditions are
+        inlined into the level stream.
+        """
+        segments: list[tuple[str, Any]] = []
+        device_levels: list[list[Node]] = []
+
+        def flush():
+            nonlocal device_levels
+            if device_levels:
+                segments.append(("device", device_levels))
+                device_levels = []
+
+        def walk(g: Graph):
+            nonlocal device_levels
+            for level in g.levels:
+                dev_nodes: list[Node] = []
+                for node in level:
+                    if node.kind == "subgraph":
+                        if dev_nodes:
+                            device_levels.append(dev_nodes)
+                            dev_nodes = []
+                        walk(node.subgraph)
+                    elif node.kind == "loop":
+                        if dev_nodes:
+                            device_levels.append(dev_nodes)
+                            dev_nodes = []
+                        if node.subgraph.is_device_only():
+                            flush()
+                            segments.append(("loop", node.subgraph))
+                        else:
+                            flush()
+                            segments.append(("host_loop", node.subgraph))
+                    elif node.kind == "sync" or node.exec_kind is ExecutionKind.Cpu:
+                        if dev_nodes:
+                            device_levels.append(dev_nodes)
+                            dev_nodes = []
+                        flush()
+                        segments.append(("host", node))
+                    else:
+                        dev_nodes.append(node)
+                if dev_nodes:
+                    device_levels.append(dev_nodes)
+            return
+
+        walk(graph)
+        flush()
+        return segments
+
+    # -- node lowering (called inside shard_map / plain trace) ----------------
+    def _resolve_args(self, node: Node, state: dict, sharded: bool):
+        """Build the python args passed to a node fn; haloed where needed."""
+        mesh = self.mesh if sharded else None
+        vals = []
+        for i, a in enumerate(node.args):
+            if isinstance(a, ReductionResult):
+                vals.append(state[a.name])
+                continue
+            t = None
+            mode = AccessMode.DEFAULT
+            from .graph import TensorArg
+            if isinstance(a, TensorArg):
+                t, mode = a.tensor, a.mode
+            elif isinstance(a, DistTensor):
+                t = a
+            if t is None:
+                vals.append(a)
+                continue
+            data = state[t.name]
+            if mode.padded:
+                data = _apply_halo(data, t, mesh)
+            vals.append(t.wrap(data) if t.is_record else data)
+        return vals
+
+    def _lower_split(self, node: Node, state: dict, sharded: bool) -> None:
+        writes = node.default_writes()
+        write_tensors = []
+        for i in writes:
+            a = node.args[i]
+            from .graph import TensorArg
+            write_tensors.append(a.tensor if isinstance(a, TensorArg) else a)
+
+        if node.overlap and sharded and self._overlap_entry(node) is not None:
+            self._lower_split_overlapped(node, state, write_tensors)
+            return
+
+        vals = self._resolve_args(node, state, sharded)
+        out = node.fn(*vals)
+        self._store_writes(node, state, write_tensors, out)
+
+    def _store_writes(self, node, state, write_tensors, out) -> None:
+        if not write_tensors:
+            return
+        if len(write_tensors) == 1:
+            out = (out,)
+        if len(out) != len(write_tensors):
+            raise ValueError(
+                f"{node.name}: fn returned {len(out)} values for "
+                f"{len(write_tensors)} writes")
+        for t, v in zip(write_tensors, out):
+            data = v.data if isinstance(v, RecordArray) else jnp.asarray(v)
+            state[t.name] = data
+
+    def _overlap_entry(self, node: Node) -> Optional[tuple[DistTensor, _HaloEntry]]:
+        """Overlap lowering applies when exactly one padded-access arg has
+        exactly one mesh-partitioned halo dim."""
+        cands = []
+        for i, t, mode in node.tensor_args():
+            if not mode.padded:
+                continue
+            entries = [e for e in _halo_plan(t, self.mesh) if e.mesh_axis]
+            if len(entries) == 1:
+                cands.append((t, entries[0]))
+            elif entries:
+                return None
+        return cands[0] if len(cands) == 1 else None
+
+    def _lower_split_overlapped(self, node: Node, state: dict,
+                                write_tensors) -> None:
+        """Interior/boundary split: ppermute of halos overlaps the interior
+        stencil program (paper Fig. 7).  fn must be a stencil mapping
+        (m + 2w) -> m cells along the partitioned dim."""
+        t, entry = self._overlap_entry(node)
+        ax, w = entry.storage_axis, entry.width
+        from .graph import TensorArg
+
+        def arg_variant(variant: str):
+            """Resolve args with the padded arg replaced per variant."""
+            vals = []
+            for i, a in enumerate(node.args):
+                if isinstance(a, ReductionResult):
+                    vals.append(state[a.name])
+                    continue
+                at, mode = (a.tensor, a.mode) if isinstance(a, TensorArg) else (
+                    (a, AccessMode.DEFAULT) if isinstance(a, DistTensor) else (None, None))
+                if at is None:
+                    vals.append(a)
+                    continue
+                data = state[at.name]
+                if at.name == t.name and mode.padded:
+                    # boundary-pad the non-partitioned haloed dims first
+                    for e in _halo_plan(at, self.mesh):
+                        if e.mesh_axis is None:
+                            data = halo_lib.pad_boundary_only(
+                                data, axis=e.storage_axis, width=e.width,
+                                boundary=at.boundary,
+                                constant=at.boundary_constant)
+                    left, right = halo_lib.halo_blocks(
+                        data, axis=ax, width=w, axis_name=entry.mesh_axis,
+                        boundary=at.boundary, constant=at.boundary_constant)
+                    n = data.shape[ax]
+                    if variant == "interior":
+                        data = data  # (n,) -> fn -> n - 2w interior cells
+                    elif variant == "left":
+                        data = jnp.concatenate(
+                            [left, _slice(data, ax, 0, 2 * w)], axis=ax)
+                    else:
+                        data = jnp.concatenate(
+                            [_slice(data, ax, n - 2 * w, 2 * w), right], axis=ax)
+                elif mode.padded:
+                    data = _apply_halo(data, at, self.mesh)
+                else:
+                    # non-padded args must be sliced to match output extent
+                    if at.name != t.name and variant != "interior":
+                        n_out = state[t.name].shape[ax]
+                        s_ax = ax
+                        if variant == "left":
+                            data = _slice(data, s_ax, 0, w)
+                        else:
+                            data = _slice(data, s_ax, n_out - w, w)
+                    elif variant == "interior" and at.name != t.name:
+                        n_out = state[t.name].shape[ax]
+                        data = _slice(data, ax, w, n_out - 2 * w)
+                vals.append(at.wrap(data) if at.is_record else data)
+            return vals
+
+        def run(variant: str):
+            out = node.fn(*arg_variant(variant))
+            if len(write_tensors) == 1:
+                out = (out,)
+            return [v.data if isinstance(v, RecordArray) else jnp.asarray(v)
+                    for v in out]
+
+        interior = run("interior")
+        left = run("left")
+        right = run("right")
+        for wt, li, ii, ri in zip(write_tensors, left, interior, right):
+            state[wt.name] = jnp.concatenate([li, ii, ri],
+                                             axis=wt.storage_axis(entry.dim))
+
+    def _lower_reduce(self, node: Node, state: dict, sharded: bool) -> None:
+        t, field = node.args
+        data = state[t.name]
+        if t.is_record and field is not None:
+            data = t.wrap(data).field(field)
+        local = node.reducer.local(data)
+        if sharded:
+            axes = tuple({ax for ax in t.partition if ax is not None
+                          and self.mesh.shape[ax] > 1})
+            if axes:
+                op = {"add": lax.psum, "max": lax.pmax, "min": lax.pmin}[
+                    node.reducer.combine]
+                local = op(local, axes)
+        state[node.result.name] = jnp.asarray(local, dtype=node.result.dtype)
+
+    def _lower_levels(self, levels, state: dict, sharded: bool) -> dict:
+        state = dict(state)
+        for level in levels:
+            # paper: nodes on a level are independent -> lower all against the
+            # same input snapshot, then merge (XLA runs them in parallel).
+            snapshot = dict(state)
+            for node in level:
+                if node.kind == "split":
+                    tmp = dict(snapshot)
+                    self._lower_split(node, tmp, sharded)
+                    for k, v in tmp.items():
+                        if k not in snapshot or v is not snapshot[k]:
+                            state[k] = v
+                elif node.kind == "reduce":
+                    tmp = dict(snapshot)
+                    self._lower_reduce(node, tmp, sharded)
+                    state[node.result.name] = tmp[node.result.name]
+                elif node.kind == "op":
+                    tmp = dict(snapshot)
+                    vals = self._resolve_args(node, tmp, sharded)
+                    writes = node.default_writes()
+                    wt = []
+                    from .graph import TensorArg
+                    for i in writes:
+                        a = node.args[i]
+                        wt.append(a.tensor if isinstance(a, TensorArg) else a)
+                    out = node.fn(*vals) if node.fn is not None else None
+                    if wt:
+                        self._store_writes(node, tmp, wt, out)
+                        for t in wt:
+                            state[t.name] = tmp[t.name]
+                else:
+                    raise ValueError(f"unexpected node kind {node.kind}")
+        return state
+
+    # -- segment compilation -----------------------------------------------
+    def _device_fn(self, levels) -> Callable:
+        sharded = self.mesh is not None and any(
+            ax is not None for t in self.tensors.values() for ax in t.partition)
+
+        def body(state):
+            return self._lower_levels(levels, state, sharded)
+
+        if not sharded:
+            return jax.jit(body, donate_argnums=0 if self.donate else ())
+
+        in_specs = {}
+        # specs must cover exactly the state dict; build lazily per call
+        def call(state):
+            specs = {k: (self.tensors[k].pspec() if k in self.tensors else P())
+                     for k in state}
+            fn = jax.shard_map(body, mesh=self.mesh, in_specs=(specs,),
+                               out_specs=specs, check_vma=False)
+            return fn(state)
+
+        return jax.jit(call, donate_argnums=0 if self.donate else ())
+
+    def _loop_fn(self, sub: Graph) -> Callable:
+        sub_exec = Executor(sub, self.mesh, donate=False)
+        sharded = self.mesh is not None and any(
+            ax is not None for t in sub_exec.tensors.values()
+            for ax in t.partition)
+
+        def body_fn(state):
+            s = state
+            for kind, payload in sub_exec._segments:
+                if kind != "device":
+                    raise ValueError("device loop with host segment")
+                s = sub_exec._lower_levels(payload, s, sharded)
+            return s
+
+        def call(state):
+            if sharded:
+                specs = {k: (sub_exec.tensors[k].pspec()
+                             if k in sub_exec.tensors else P())
+                         for k in state}
+
+                def shard_body(s):
+                    return lax.while_loop(sub.condition, body_fn, body_fn(s))
+
+                fn = jax.shard_map(shard_body, mesh=self.mesh,
+                                   in_specs=(specs,), out_specs=specs,
+                                   check_vma=False)
+                return fn(state)
+            return lax.while_loop(sub.condition, body_fn, body_fn(state))
+
+        return jax.jit(call, donate_argnums=0 if self.donate else ())
+
+    # -- public execution -----------------------------------------------------
+    def __call__(self, state: dict) -> dict:
+        for i, (kind, payload) in enumerate(self._segments):
+            if kind == "device":
+                fn = self._jitted.get(i)
+                if fn is None:
+                    fn = self._jitted[i] = self._device_fn(payload)
+                state = fn(state)
+            elif kind == "loop":
+                fn = self._jitted.get(i)
+                if fn is None:
+                    fn = self._jitted[i] = self._loop_fn(payload)
+                state = fn(state)
+            elif kind == "host_loop":
+                sub_exec = Executor(payload, self.mesh, donate=False)
+                state = sub_exec(state)
+                while bool(jax.device_get(payload.condition(state))):
+                    state = sub_exec(state)
+            elif kind == "host":
+                node: Node = payload
+                jax.block_until_ready(jax.tree_util.tree_leaves(state))
+                if node.fn is not None:
+                    vals = self._resolve_args(node, state, sharded=False) \
+                        if node.args else []
+                    node.fn(*vals)
+        return state
+
+    def run(self, state: dict, steps: int) -> dict:
+        """Execute the whole graph ``steps`` times (graphs are built once,
+        executed many — paper §5.3).  Device-only graphs without a condition
+        are compiled as one fori_loop."""
+        if steps <= 0:
+            return state
+        if (self.graph.is_device_only() and self.graph.condition is None
+                and all(k == "device" for k, _ in self._segments)):
+            levels = [lv for _, seg in self._segments for lv in seg]
+            sharded = self.mesh is not None and any(
+                ax is not None for t in self.tensors.values()
+                for ax in t.partition)
+
+            def body(_, s):
+                return self._lower_levels(levels, s, sharded)
+
+            def call(s):
+                if sharded:
+                    specs = {k: (self.tensors[k].pspec()
+                                 if k in self.tensors else P())
+                             for k in s}
+                    fn = jax.shard_map(
+                        lambda st: lax.fori_loop(0, steps, body, st),
+                        mesh=self.mesh, in_specs=(specs,), out_specs=specs,
+                        check_vma=False)
+                    return fn(s)
+                return lax.fori_loop(0, steps, body, s)
+
+            return jax.jit(call, donate_argnums=0 if self.donate else ())(state)
+        for _ in range(steps):
+            state = self(state)
+        return state
+
+
+def execute(graph: Graph, mesh: Optional[Mesh] = None, steps: int = 1,
+            **state_overrides) -> dict:
+    """One-shot convenience: init state, run, return final state."""
+    ex = Executor(graph, mesh)
+    state = ex.init_state(**state_overrides)
+    return ex.run(state, steps) if steps != 1 else ex(state)

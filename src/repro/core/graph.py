@@ -1,0 +1,322 @@
+"""Graph builder (paper §5.3): emplace / then / split / then_split /
+reduce / then_reduce / conditional / sync / subgraphs + access modifiers.
+
+A :class:`Graph` records *levels* of :class:`Node` s — the paper's DAG where
+a level contains nodes that may execute in parallel and each level depends
+on the previous one.  Per-partition node splitting (the paper's ``split``
+creating one node per tensor partition) is realized by SPMD: the executor
+lowers the level once and every shard runs it, so the paper's parallel
+kernel submission is implicit (DESIGN.md §2).
+
+Access modifiers communicate *how a kernel touches halo data*, which is
+exactly the information the paper uses to minimize graph connectivity:
+
+* plain tensor arg                      — no halo read (paper's default);
+* ``concurrent_padded_access(t)``       — reads halo, writes a different
+  buffer: halo exchange may overlap the kernel's interior compute;
+* ``exclusive_padded_access(t)``        — reads halo of a buffer the kernel
+  itself updates: the pre-update halo must be captured first (ordering edge);
+* ``*_in_shared(t)``                    — additionally stage blocks in VMEM
+  (TPU's shared memory) via the Pallas path of the kernel.
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field as dfield
+from typing import Any, Callable, Optional, Sequence, Union
+
+from .tensor import DistTensor, ReductionResult
+
+__all__ = [
+    "ExecutionKind",
+    "AccessMode",
+    "TensorArg",
+    "concurrent_padded_access",
+    "exclusive_padded_access",
+    "in_shared",
+    "concurrent_padded_access_in_shared",
+    "exclusive_padded_access_in_shared",
+    "Reducer",
+    "SumReducer",
+    "MaxReducer",
+    "MinReducer",
+    "Node",
+    "Graph",
+]
+
+_node_counter = itertools.count()
+
+
+class ExecutionKind(enum.Enum):
+    Cpu = "cpu"  # host-executed (outside jit) — heterogeneous nodes
+    Gpu = "gpu"  # device-executed (jit/shard_map); TPU in production
+
+
+class AccessMode(enum.Enum):
+    DEFAULT = "default"
+    CONCURRENT_PADDED = "concurrent_padded"
+    EXCLUSIVE_PADDED = "exclusive_padded"
+    SHARED = "shared"
+    CONCURRENT_PADDED_SHARED = "concurrent_padded_shared"
+    EXCLUSIVE_PADDED_SHARED = "exclusive_padded_shared"
+
+    @property
+    def padded(self) -> bool:
+        return self in (
+            AccessMode.CONCURRENT_PADDED,
+            AccessMode.EXCLUSIVE_PADDED,
+            AccessMode.CONCURRENT_PADDED_SHARED,
+            AccessMode.EXCLUSIVE_PADDED_SHARED,
+        )
+
+    @property
+    def exclusive(self) -> bool:
+        return self in (
+            AccessMode.EXCLUSIVE_PADDED,
+            AccessMode.EXCLUSIVE_PADDED_SHARED,
+        )
+
+    @property
+    def shared(self) -> bool:
+        return self in (
+            AccessMode.SHARED,
+            AccessMode.CONCURRENT_PADDED_SHARED,
+            AccessMode.EXCLUSIVE_PADDED_SHARED,
+        )
+
+
+@dataclass(frozen=True)
+class TensorArg:
+    tensor: DistTensor
+    mode: AccessMode = AccessMode.DEFAULT
+
+
+def concurrent_padded_access(t: DistTensor) -> TensorArg:
+    return TensorArg(t, AccessMode.CONCURRENT_PADDED)
+
+
+def exclusive_padded_access(t: DistTensor) -> TensorArg:
+    return TensorArg(t, AccessMode.EXCLUSIVE_PADDED)
+
+
+def in_shared(t: DistTensor) -> TensorArg:
+    return TensorArg(t, AccessMode.SHARED)
+
+
+def concurrent_padded_access_in_shared(t: DistTensor) -> TensorArg:
+    return TensorArg(t, AccessMode.CONCURRENT_PADDED_SHARED)
+
+
+def exclusive_padded_access_in_shared(t: DistTensor) -> TensorArg:
+    return TensorArg(t, AccessMode.EXCLUSIVE_PADDED_SHARED)
+
+
+@dataclass(frozen=True)
+class Reducer:
+    """Local reduction + cross-shard combiner pair."""
+
+    name: str
+    local: Callable  # array -> scalar
+    combine: str     # 'add' | 'max' | 'min' (lax.p* op)
+
+
+def SumReducer() -> Reducer:  # noqa: N802 - mirrors paper naming
+    import jax.numpy as jnp
+
+    return Reducer("sum", jnp.sum, "add")
+
+
+def MaxReducer() -> Reducer:  # noqa: N802
+    import jax.numpy as jnp
+
+    return Reducer("max", jnp.max, "max")
+
+
+def MinReducer() -> Reducer:  # noqa: N802
+    import jax.numpy as jnp
+
+    return Reducer("min", jnp.min, "min")
+
+
+NodeArg = Union[DistTensor, TensorArg, ReductionResult, Any]
+
+
+@dataclass
+class Node:
+    kind: str                      # 'op' | 'split' | 'reduce' | 'sync' | 'loop'
+    fn: Optional[Callable] = None
+    args: tuple = ()
+    writes: Optional[tuple[int, ...]] = None  # arg indices the fn returns
+    exec_kind: ExecutionKind = ExecutionKind.Gpu
+    reducer: Optional[Reducer] = None
+    result: Optional[ReductionResult] = None
+    overlap: bool = False          # interior/boundary comm-compute overlap
+    subgraph: Optional["Graph"] = None
+    name: str = dfield(default_factory=lambda: f"node{next(_node_counter)}")
+
+    def tensor_args(self):
+        for i, a in enumerate(self.args):
+            if isinstance(a, TensorArg):
+                yield i, a.tensor, a.mode
+            elif isinstance(a, DistTensor):
+                yield i, a, AccessMode.DEFAULT
+
+    def default_writes(self) -> tuple[int, ...]:
+        """Paper convention for split nodes: the last tensor argument is the
+        output (saxpy: (a, x, y) writes y; double-buffered stencils:
+        (in, out) writes out)."""
+        if self.writes is not None:
+            return self.writes
+        tidx = [i for i, _, _ in self.tensor_args()]
+        return (tidx[-1],) if tidx else ()
+
+
+class Graph:
+    """Builder for a level-structured DAG (paper Listings 5-12)."""
+
+    def __init__(self, default_exec: ExecutionKind = ExecutionKind.Gpu,
+                 name: str = "graph"):
+        self.default_exec = default_exec
+        self.name = name
+        self.levels: list[list[Node]] = []
+        self.condition: Optional[Callable] = None  # state -> bool array
+
+    # -- internals ---------------------------------------------------------
+    def _current_level(self) -> list[Node]:
+        if not self.levels:
+            self.levels.append([])
+        return self.levels[-1]
+
+    def _new_level(self) -> list[Node]:
+        if not self.levels or self.levels[-1]:
+            self.levels.append([])
+        return self.levels[-1]
+
+    def _exec(self, kind: Optional[ExecutionKind]) -> ExecutionKind:
+        return kind if kind is not None else self.default_exec
+
+    def _add(self, level: list[Node], item, exec_kind, **kw) -> None:
+        if isinstance(item, Graph):
+            level.append(Node(kind="loop" if item.condition else "subgraph",
+                              subgraph=item,
+                              exec_kind=self._exec(exec_kind)))
+        else:
+            level.append(Node(fn=item, exec_kind=self._exec(exec_kind), **kw))
+
+    # -- paper API -----------------------------------------------------------
+    def emplace(self, *items, exec_kind: Optional[ExecutionKind] = None,
+                **kw) -> "Graph":
+        """Add node(s)/subgraph(s) to the *current* level (parallel)."""
+        level = self._current_level()
+        for item in items:
+            self._add(level, item, exec_kind, kind="op", **kw)
+        return self
+
+    def then(self, *items, exec_kind: Optional[ExecutionKind] = None,
+             **kw) -> "Graph":
+        """Add node(s)/subgraph(s) on a *new* level (sequential dep)."""
+        level = self._new_level()
+        for item in items:
+            self._add(level, item, exec_kind, kind="op", **kw)
+        return self
+
+    def split(self, fn: Callable, *args: NodeArg,
+              writes: Optional[Sequence[int]] = None,
+              exec_kind: Optional[ExecutionKind] = None,
+              overlap: bool = False) -> "Graph":
+        """Tensor op on the current level; becomes one node per partition
+        (paper §5.3.3) — here: SPMD over the tensor's mesh axes."""
+        self._current_level().append(
+            Node(kind="split", fn=fn, args=tuple(args),
+                 writes=None if writes is None else tuple(writes),
+                 exec_kind=self._exec(exec_kind), overlap=overlap))
+        return self
+
+    def then_split(self, fn: Callable, *args: NodeArg,
+                   writes: Optional[Sequence[int]] = None,
+                   exec_kind: Optional[ExecutionKind] = None,
+                   overlap: bool = False) -> "Graph":
+        self._new_level()
+        return self.split(fn, *args, writes=writes, exec_kind=exec_kind,
+                          overlap=overlap)
+
+    def reduce(self, tensor: DistTensor, result: ReductionResult,
+               reducer: Reducer, field: Optional[str] = None) -> "Graph":
+        self._current_level().append(
+            Node(kind="reduce", args=(tensor, field), reducer=reducer,
+                 result=result, exec_kind=ExecutionKind.Gpu))
+        return self
+
+    def then_reduce(self, tensor: DistTensor, result: ReductionResult,
+                    reducer: Reducer, field: Optional[str] = None) -> "Graph":
+        self._new_level()
+        return self.reduce(tensor, result, reducer, field)
+
+    def sync(self, fn: Optional[Callable] = None) -> "Graph":
+        """Full barrier: all pending device work completes, then ``fn`` runs
+        on the host (paper §5.3.4)."""
+        self._new_level().append(Node(kind="sync", fn=fn,
+                                      exec_kind=ExecutionKind.Cpu))
+        self._new_level()
+        return self
+
+    def conditional(self, pred: Callable) -> "Graph":
+        """Re-execute this graph while ``pred(state)`` is true (paper
+        §5.3.6 — do/while semantics, cf. Listing 9's map-reduce loop)."""
+        self.condition = pred
+        return self
+
+    # -- introspection ---------------------------------------------------------
+    def nodes(self):
+        for level in self.levels:
+            yield from level
+
+    def all_tensors(self) -> dict[str, DistTensor]:
+        out: dict[str, DistTensor] = {}
+        for node in self.nodes():
+            if node.subgraph is not None:
+                out.update(node.subgraph.all_tensors())
+                continue
+            for _, t, _ in node.tensor_args():
+                prev = out.get(t.name)
+                if prev is not None and prev.storage_key() != t.storage_key():
+                    raise ValueError(
+                        f"tensor name {t.name!r} bound to two different "
+                        f"storages (halo/boundary may differ per access; "
+                        f"space/layout/partition may not)")
+                out[t.name] = t
+        return out
+
+    def all_results(self) -> dict[str, ReductionResult]:
+        out: dict[str, ReductionResult] = {}
+        for node in self.nodes():
+            if node.subgraph is not None:
+                out.update(node.subgraph.all_results())
+            if node.result is not None:
+                out[node.result.name] = node.result
+        return out
+
+    def is_device_only(self) -> bool:
+        for node in self.nodes():
+            if node.kind == "sync":
+                return False
+            if node.subgraph is not None and not node.subgraph.is_device_only():
+                return False
+            if node.exec_kind is ExecutionKind.Cpu and node.kind != "subgraph":
+                return False
+        return True
+
+    def summary(self) -> str:
+        lines = [f"Graph {self.name!r} ({len(self.levels)} levels)"]
+        for i, level in enumerate(self.levels):
+            for n in level:
+                desc = n.kind
+                if n.subgraph is not None:
+                    desc += f"[{n.subgraph.name}]"
+                ts = ",".join(t.name for _, t, _ in n.tensor_args())
+                lines.append(f"  L{i}: {n.name} {desc} ({ts})")
+        if self.condition is not None:
+            lines.append("  while <condition>")
+        return "\n".join(lines)

@@ -1,0 +1,181 @@
+"""Halo (padding) exchange — paper §4.1/§5.4 adapted to shard_map/ppermute.
+
+Ripple tensors carry ``padding`` cells filled either from neighbouring
+partitions (inter-device copy) or from a boundary policy (constant /
+first-order extrapolation).  Here a shard's halo arrives via
+``lax.ppermute`` — XLA lowers this to ``collective-permute`` which the TPU
+latency-hiding scheduler runs asynchronously, which is exactly the paper's
+"padding ops can overlap the split kernel" (Fig. 7) in SPMD form.
+
+All functions in this module run *inside* shard_map (per-shard view).
+``pad_boundary_only`` provides the single-shard / unpartitioned-dim case.
+"""
+
+from __future__ import annotations
+
+import enum
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "Boundary",
+    "exchange",
+    "halo_blocks",
+    "pad_boundary_only",
+    "unpad",
+    "interior",
+]
+
+
+class Boundary(enum.Enum):
+    """Fill policy for halo cells at the global domain edge (paper's
+    'methods for loading the padding for common cases')."""
+
+    TRANSMISSIVE = "transmissive"  # constant (zero-gradient) extrapolation
+    LINEAR = "linear"              # first-order extrapolation
+    PERIODIC = "periodic"          # wrap around the global domain
+    CONSTANT = "constant"          # fixed value
+
+
+def _take(x: jax.Array, axis: int, start: int, size: int) -> jax.Array:
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(start, start + size) if start >= 0 else slice(start, None)
+    return x[tuple(idx)]
+
+
+def _edge_fill(
+    x: jax.Array, axis: int, width: int, side: str, boundary: Boundary, constant
+) -> jax.Array:
+    """Halo block (width cells) synthesized from the shard's own edge."""
+    if boundary is Boundary.CONSTANT:
+        shape = list(x.shape)
+        shape[axis] = width
+        return jnp.full(shape, constant, dtype=x.dtype)
+    if side == "left":
+        edge = _take(x, axis, 0, 1)
+        nxt = _take(x, axis, 1, 1) if x.shape[axis] > 1 else edge
+        steps = jnp.arange(width, 0, -1)
+    else:
+        edge = _take(x, axis, x.shape[axis] - 1, 1)
+        nxt = _take(x, axis, x.shape[axis] - 2, 1) if x.shape[axis] > 1 else edge
+        steps = jnp.arange(1, width + 1)
+    reps = [1] * x.ndim
+    reps[axis] = width
+    tiled = jnp.tile(edge, reps)
+    if boundary is Boundary.TRANSMISSIVE:
+        return tiled
+    # LINEAR: edge + k * (edge - next_inner)
+    shape = [1] * x.ndim
+    shape[axis] = width
+    k = steps.reshape(shape).astype(x.dtype)
+    return tiled + k * (edge - nxt)
+
+
+def halo_blocks(
+    x: jax.Array,
+    *,
+    axis: int,
+    width: int,
+    axis_name: str,
+    boundary: Boundary = Boundary.TRANSMISSIVE,
+    constant: Any = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """The (left, right) halo blocks a shard receives, NOT yet concatenated.
+
+    Exposing the blocks separately lets the executor overlap the ppermute
+    with interior compute (paper Fig. 7: ``a_p`` parallel with ``a_s``).
+    Must be called inside shard_map.
+    """
+    n = lax.psum(1, axis_name)  # number of shards (static at trace time)
+    idx = lax.axis_index(axis_name)
+
+    send_right = _take(x, axis, x.shape[axis] - width, width)  # -> right nbr
+    send_left = _take(x, axis, 0, width)  # -> left nbr
+
+    if boundary is Boundary.PERIODIC:
+        left_halo = lax.ppermute(
+            send_right, axis_name, [((i - 1) % n, i) for i in range(n)]
+        )
+        right_halo = lax.ppermute(
+            send_left, axis_name, [((i + 1) % n, i) for i in range(n)]
+        )
+    else:
+        # Non-cyclic: edge shards receive zeros, then overwrite from policy.
+        left_halo = lax.ppermute(
+            send_right, axis_name, [(i, i + 1) for i in range(n - 1)]
+        )
+        right_halo = lax.ppermute(
+            send_left, axis_name, [(i, i - 1) for i in range(1, n)]
+        )
+        left_fill = _edge_fill(x, axis, width, "left", boundary, constant)
+        right_fill = _edge_fill(x, axis, width, "right", boundary, constant)
+        left_halo = jnp.where(idx == 0, left_fill, left_halo)
+        right_halo = jnp.where(idx == n - 1, right_fill, right_halo)
+    return left_halo, right_halo
+
+
+def exchange(
+    x: jax.Array,
+    *,
+    axis: int,
+    width: int,
+    axis_name: str,
+    boundary: Boundary = Boundary.TRANSMISSIVE,
+    constant: Any = 0.0,
+) -> jax.Array:
+    """Per-shard halo exchange along storage ``axis`` over mesh ``axis_name``.
+
+    Returns the shard extended by ``width`` cells on both sides of ``axis``:
+    interior halos come from neighbours via ppermute, global-edge halos from
+    the boundary policy.  Must be called inside shard_map.
+    """
+    if width == 0:
+        return x
+    left_halo, right_halo = halo_blocks(
+        x,
+        axis=axis,
+        width=width,
+        axis_name=axis_name,
+        boundary=boundary,
+        constant=constant,
+    )
+    return jnp.concatenate([left_halo, x, right_halo], axis=axis)
+
+
+def pad_boundary_only(
+    x: jax.Array,
+    *,
+    axis: int,
+    width: int,
+    boundary: Boundary = Boundary.TRANSMISSIVE,
+    constant: Any = 0.0,
+) -> jax.Array:
+    """Halo padding for an axis that is NOT partitioned (or a 1-shard mesh
+    axis): both halos come from the boundary policy (PERIODIC wraps self)."""
+    if width == 0:
+        return x
+    if boundary is Boundary.PERIODIC:
+        n = x.shape[axis]
+        # modular gather supports width > n (wraps multiple times)
+        left = jnp.take(x, (jnp.arange(-width, 0) % n), axis=axis)
+        right = jnp.take(x, (jnp.arange(width) % n), axis=axis)
+    else:
+        left = _edge_fill(x, axis, width, "left", boundary, constant)
+        right = _edge_fill(x, axis, width, "right", boundary, constant)
+    return jnp.concatenate([left, x, right], axis=axis)
+
+
+def unpad(x: jax.Array, *, axis: int, width: int) -> jax.Array:
+    """Strip ``width`` halo cells from both ends of ``axis``."""
+    if width == 0:
+        return x
+    return _take(x, axis, width, x.shape[axis] - 2 * width)
+
+
+def interior(x: jax.Array, *, axis: int, width: int) -> jax.Array:
+    """The part of a shard whose stencil result needs no halo."""
+    return unpad(x, axis=axis, width=width)

@@ -1,0 +1,344 @@
+"""Polymorphic data layout (paper §4.2) — JAX/TPU adaptation.
+
+Ripple lets a user-defined struct be stored over an N-d space either
+contiguously (AoS) or strided (SoA), selected by a single template
+parameter, with accessors that make kernel code layout-independent.
+
+Here a :class:`RecordSpec` plays the role of ``StorageDescriptor`` and a
+:class:`RecordArray` is the materialized storage over a space:
+
+* ``Layout.AOS``  -> one array of shape ``(*space, C)``   (components minor)
+* ``Layout.SOA``  -> one array of shape ``(C, *space)``   (space minor)
+
+TPU note (DESIGN.md §2): on GPU SoA wins via warp coalescing; on TPU it
+wins because the minor-most dimension fills the 128-lane VREGs and gives
+contiguous HBM->VMEM DMA, while a small minor component dim wastes lanes.
+Same paper conclusion, different mechanism.
+
+``RecordArray`` is a pytree, so it moves freely through jit / shard_map /
+grad, and :class:`RecordRef` provides the same named accessors over Pallas
+``Ref`` blocks so every kernel is written once for both layouts.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Layout",
+    "Field",
+    "Vector",
+    "RecordSpec",
+    "RecordArray",
+    "RecordRef",
+]
+
+
+class Layout(enum.Enum):
+    """Storage layout for record data (paper: contiguous vs strided)."""
+
+    AOS = "aos"  # array-of-structs: components contiguous per cell
+    SOA = "soa"  # struct-of-arrays: each component contiguous over space
+
+    def __repr__(self) -> str:  # nicer in config dumps
+        return f"Layout.{self.name}"
+
+
+@dataclass(frozen=True)
+class Field:
+    """One named member of a record; ``size > 1`` is the paper's Vector<T, D>."""
+
+    name: str
+    size: int = 1
+
+    def __post_init__(self) -> None:
+        if self.size < 1:
+            raise ValueError(f"field {self.name!r}: size must be >= 1")
+
+
+def Vector(name: str, size: int) -> Field:  # noqa: N802 - mirrors paper API
+    """Paper's ``Vector<T, Size>`` member declaration."""
+    return Field(name, size)
+
+
+@dataclass(frozen=True)
+class RecordSpec:
+    """The ``StorageDescriptor``: ordered named fields of a record."""
+
+    fields: tuple[Field, ...]
+
+    def __post_init__(self) -> None:
+        names = [f.name for f in self.fields]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate field names in {names}")
+
+    @classmethod
+    def create(cls, *fields: Field | tuple[str, int] | str) -> "RecordSpec":
+        norm = []
+        for f in fields:
+            if isinstance(f, Field):
+                norm.append(f)
+            elif isinstance(f, str):
+                norm.append(Field(f))
+            else:
+                norm.append(Field(*f))
+        return cls(tuple(norm))
+
+    @property
+    def num_components(self) -> int:
+        return sum(f.size for f in self.fields)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(f.name for f in self.fields)
+
+    def offset(self, name: str) -> tuple[int, int]:
+        """(start, size) of a field in the component axis (compile-time,
+        like the paper's ``get<I>`` offset computation)."""
+        start = 0
+        for f in self.fields:
+            if f.name == name:
+                return start, f.size
+            start += f.size
+        raise KeyError(f"no field {name!r} in {self.names}")
+
+
+def _component_axis(layout: Layout, ndim_space: int) -> int:
+    return ndim_space if layout is Layout.AOS else 0
+
+
+@jax.tree_util.register_pytree_node_class
+class RecordArray:
+    """A record-of-fields stored over an N-d space with polymorphic layout.
+
+    The single backing array keeps the abstraction zero-copy for field
+    *access* (slices) while making whole-record ops (halo exchange, DMA,
+    checkpointing) single-buffer, matching Ripple's single-allocation
+    storage.
+    """
+
+    __slots__ = ("data", "spec", "layout")
+
+    def __init__(self, data: jax.Array, spec: RecordSpec, layout: Layout):
+        self.data = data
+        self.spec = spec
+        self.layout = layout
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), (self.spec, self.layout)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        spec, layout = aux
+        return cls(children[0], spec, layout)
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def create(
+        cls,
+        spec: RecordSpec,
+        space: Sequence[int],
+        layout: Layout = Layout.SOA,
+        dtype: Any = jnp.float32,
+        fill: float = 0.0,
+    ) -> "RecordArray":
+        space = tuple(space)
+        shape = cls.storage_shape(spec, space, layout)
+        return cls(jnp.full(shape, fill, dtype=dtype), spec, layout)
+
+    @classmethod
+    def from_fields(
+        cls,
+        spec: RecordSpec,
+        fields: Mapping[str, jax.Array],
+        layout: Layout = Layout.SOA,
+    ) -> "RecordArray":
+        """Build from per-field arrays of shape ``(*space[, size])``;
+        size-1 fields may pass ``(*space)`` or ``(*space, 1)``."""
+        # resolve the space from any multi-component field first (size-1
+        # fields are ambiguous about a trailing 1)
+        space = None
+        for f in spec.fields:
+            if f.size > 1:
+                space = tuple(jnp.asarray(fields[f.name]).shape[:-1])
+                break
+        if space is None:  # all size-1: full shapes are the space
+            space = tuple(jnp.asarray(fields[spec.fields[0].name]).shape)
+        parts = []
+        for f in spec.fields:
+            v = jnp.asarray(fields[f.name])
+            if f.size == 1 and v.shape == space:
+                v = v[..., None]
+            if v.shape != (*space, f.size):
+                raise ValueError(
+                    f"field {f.name!r}: expected {(*space, f.size)} or "
+                    f"{space}, got {v.shape}"
+                )
+            parts.append(v)
+        aos = jnp.concatenate(parts, axis=-1)
+        out = cls(aos, spec, Layout.AOS)
+        return out if layout is Layout.AOS else out.with_layout(layout)
+
+    @staticmethod
+    def storage_shape(
+        spec: RecordSpec, space: Sequence[int], layout: Layout
+    ) -> tuple[int, ...]:
+        c = spec.num_components
+        return (*space, c) if layout is Layout.AOS else (c, *space)
+
+    # -- basic properties -------------------------------------------------
+    @property
+    def space(self) -> tuple[int, ...]:
+        if self.layout is Layout.AOS:
+            return self.data.shape[:-1]
+        return self.data.shape[1:]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def num_components(self) -> int:
+        return self.spec.num_components
+
+    def __repr__(self) -> str:
+        return (
+            f"RecordArray(space={self.space}, fields={self.spec.names}, "
+            f"layout={self.layout.name}, dtype={self.dtype})"
+        )
+
+    # -- accessors (paper §4.3) -------------------------------------------
+    def field(self, name: str) -> jax.Array:
+        """Field view with shape ``(*space,)`` (size 1) or ``(*space, size)``."""
+        start, size = self.spec.offset(name)
+        if self.layout is Layout.AOS:
+            v = self.data[..., start : start + size]
+        else:
+            v = jnp.moveaxis(self.data[start : start + size], 0, -1)
+        return v[..., 0] if size == 1 else v
+
+    f = field  # short alias used heavily in kernels/examples
+
+    def set_field(self, name: str, value: jax.Array) -> "RecordArray":
+        start, size = self.spec.offset(name)
+        value = jnp.asarray(value, dtype=self.dtype)
+        if size == 1 and value.ndim == len(self.space):
+            value = value[..., None]
+        if value.shape != (*self.space, size):
+            raise ValueError(
+                f"set_field({name!r}): expected {(*self.space, size)}, got {value.shape}"
+            )
+        if self.layout is Layout.AOS:
+            data = self.data.at[..., start : start + size].set(value)
+        else:
+            data = self.data.at[start : start + size].set(
+                jnp.moveaxis(value, -1, 0)
+            )
+        return RecordArray(data, self.spec, self.layout)
+
+    def to_fields(self) -> dict[str, jax.Array]:
+        return {f.name: self.field(f.name) for f in self.spec.fields}
+
+    # -- layout interop (paper: "interoperability of the layouts") ---------
+    def with_layout(self, layout: Layout) -> "RecordArray":
+        if layout is self.layout:
+            return self
+        nd = len(self.space)
+        if layout is Layout.SOA:  # (*space, C) -> (C, *space)
+            data = jnp.moveaxis(self.data, nd, 0)
+        else:  # (C, *space) -> (*space, C)
+            data = jnp.moveaxis(self.data, 0, nd)
+        # materialize the transpose so downstream DMA sees the new layout
+        return RecordArray(data.copy(), self.spec, layout)
+
+    # -- whole-record ops used by tensor/halo machinery ---------------------
+    def map_data(self, fn) -> "RecordArray":
+        """Apply ``fn`` to the raw storage (shape-preserving)."""
+        return RecordArray(fn(self.data), self.spec, self.layout)
+
+    def space_axis(self, dim: int) -> int:
+        """Storage axis corresponding to space dimension ``dim``."""
+        nd = len(self.space)
+        if not 0 <= dim < nd:
+            raise ValueError(f"dim {dim} out of range for space {self.space}")
+        return dim if self.layout is Layout.AOS else dim + 1
+
+
+class RecordRef:
+    """Layout-generic accessor over a Pallas ``Ref`` block (kernel-side).
+
+    A Pallas kernel receives the raw block of the backing array; wrapping it
+    in ``RecordRef(ref, spec, layout)`` gives the same ``.get/.set`` component
+    API in both layouts, so kernels are written once (paper's core claim).
+
+    Components are returned as plain ``(*block_space)`` arrays — the layout
+    only changes *where* they live in the block.
+    """
+
+    __slots__ = ("ref", "spec", "layout")
+
+    def __init__(self, ref, spec: RecordSpec, layout: Layout):
+        self.ref = ref
+        self.spec = spec
+        self.layout = layout
+
+    def get(self, name: str, comp: int = 0):
+        start, size = self.spec.offset(name)
+        if comp >= size:
+            raise IndexError(f"{name}[{comp}] out of range (size {size})")
+        idx = start + comp
+        if self.layout is Layout.AOS:
+            return self.ref[..., idx]
+        return self.ref[idx]
+
+    def set(self, name: str, value, comp: int = 0) -> None:
+        start, size = self.spec.offset(name)
+        if comp >= size:
+            raise IndexError(f"{name}[{comp}] out of range (size {size})")
+        idx = start + comp
+        if self.layout is Layout.AOS:
+            self.ref[..., idx] = value
+        else:
+            self.ref[idx] = value
+
+    def get_vector(self, name: str):
+        """All components of a vector field, stacked on a NEW leading axis."""
+        start, size = self.spec.offset(name)
+        return jnp.stack([self.get(name, i) for i in range(size)], axis=0)
+
+
+def block_spec_for(
+    spec: RecordSpec,
+    layout: Layout,
+    space_block: tuple[int, ...],
+    space_index_map,
+):
+    """Build a Pallas BlockSpec for a RecordArray storage given a *space*
+    block shape and index map; the component axis always rides along whole.
+
+    ``space_index_map(*grid_ids) -> space block indices`` — layout handling
+    (where the component axis sits) is done here so kernels never branch.
+    """
+    from jax.experimental import pallas as pl  # local: keep core import-light
+
+    c = spec.num_components
+    if layout is Layout.AOS:
+        block = (*space_block, c)
+
+        def index_map(*ids):
+            return (*space_index_map(*ids), 0)
+
+    else:
+        block = (c, *space_block)
+
+        def index_map(*ids):
+            return (0, *space_index_map(*ids))
+
+    return pl.BlockSpec(block, index_map)

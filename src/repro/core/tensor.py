@@ -1,0 +1,163 @@
+"""N-dimensional distributed tensor (paper §4.1) on a JAX mesh.
+
+A :class:`DistTensor` is the *handle* describing a logical space: its
+record spec + polymorphic layout (C1), per-dimension partitioning onto
+mesh axes, per-dimension halo widths and boundary policies (C3).  The
+storage itself is a jax.Array (or :class:`RecordArray`) living in the
+executor's state dict, placed with the NamedSharding derived here.
+
+Paper mapping:
+  * ``Tensor<double, 2> t({2, 2}, size_x, size_y)``  ->
+    ``DistTensor("t", space=(sx, sy), partition=("gx", "gy"))``
+  * sub-partitions (same-device blocks)              ->  ``subblocks`` hint,
+    consumed by Pallas kernels as their BlockSpec grid (DESIGN.md §2).
+  * padding parameter                                ->  ``halo`` widths.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .halo import Boundary
+from .layout import Layout, RecordArray, RecordSpec
+
+__all__ = ["DistTensor", "ReductionResult", "make_reduction_result"]
+
+
+@dataclass(frozen=True)
+class DistTensor:
+    """Handle for a partitioned, haloed, layout-polymorphic tensor."""
+
+    name: str
+    space: tuple[int, ...]
+    dtype: Any = jnp.float32
+    spec: Optional[RecordSpec] = None          # None -> scalar cells
+    layout: Layout = Layout.SOA
+    partition: tuple[Optional[str], ...] = ()  # mesh axis per space dim
+    halo: tuple[int, ...] = ()
+    boundary: Boundary = Boundary.TRANSMISSIVE
+    boundary_constant: float = 0.0
+    subblocks: tuple[int, ...] = ()            # per-device sub-partition hint
+
+    def __post_init__(self):
+        nd = len(self.space)
+        object.__setattr__(self, "space", tuple(self.space))
+        part = tuple(self.partition) + (None,) * (nd - len(self.partition))
+        object.__setattr__(self, "partition", part[:nd])
+        h = tuple(self.halo) + (0,) * (nd - len(self.halo))
+        object.__setattr__(self, "halo", h[:nd])
+
+    # -- shape/layout ----------------------------------------------------
+    @property
+    def is_record(self) -> bool:
+        return self.spec is not None
+
+    @property
+    def storage_shape(self) -> tuple[int, ...]:
+        if not self.is_record:
+            return self.space
+        return RecordArray.storage_shape(self.spec, self.space, self.layout)
+
+    def storage_axis(self, dim: int) -> int:
+        """Storage axis for space dim (skips the SoA component axis)."""
+        if not self.is_record:
+            return dim
+        return dim if self.layout is Layout.AOS else dim + 1
+
+    # -- sharding ----------------------------------------------------------
+    def pspec(self) -> P:
+        """PartitionSpec over the *storage* shape (component axis unsharded)."""
+        dims: list[Optional[str]] = list(self.partition)
+        if self.is_record:
+            if self.layout is Layout.AOS:
+                dims = dims + [None]
+            else:
+                dims = [None] + dims
+        return P(*dims)
+
+    def sharding(self, mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.pspec())
+
+    def shards_along(self, mesh: Mesh, dim: int) -> int:
+        ax = self.partition[dim]
+        return 1 if ax is None else mesh.shape[ax]
+
+    def shard_space(self, mesh: Mesh) -> tuple[int, ...]:
+        return tuple(
+            s // self.shards_along(mesh, d) for d, s in enumerate(self.space)
+        )
+
+    def validate_mesh(self, mesh: Mesh) -> None:
+        for d, ax in enumerate(self.partition):
+            if ax is None:
+                continue
+            if ax not in mesh.shape:
+                raise ValueError(f"{self.name}: mesh has no axis {ax!r}")
+            n = mesh.shape[ax]
+            if self.space[d] % n:
+                raise ValueError(
+                    f"{self.name}: space dim {d} ({self.space[d]}) not divisible "
+                    f"by mesh axis {ax!r} ({n})"
+                )
+            if self.halo[d] and self.space[d] // n < self.halo[d]:
+                raise ValueError(
+                    f"{self.name}: shard extent {self.space[d] // n} smaller than "
+                    f"halo {self.halo[d]} in dim {d}"
+                )
+
+    # -- materialization -----------------------------------------------------
+    def init(
+        self, mesh: Optional[Mesh] = None, fill: float = 0.0
+    ) -> jax.Array | RecordArray:
+        """Allocate storage (zeros/fill), sharded if a mesh is given."""
+        if mesh is not None:
+            self.validate_mesh(mesh)
+        arr = jnp.full(self.storage_shape, fill, dtype=self.dtype)
+        if mesh is not None:
+            arr = jax.device_put(arr, self.sharding(mesh))
+        if self.is_record:
+            return RecordArray(arr, self.spec, self.layout)
+        return arr
+
+    def wrap(self, data: jax.Array) -> jax.Array | RecordArray:
+        if self.is_record:
+            return RecordArray(data, self.spec, self.layout)
+        return data
+
+    def with_(self, **kw) -> "DistTensor":
+        return replace(self, **kw)
+
+    def storage_key(self) -> tuple:
+        """Identity of the *storage* this handle refers to.  Halo widths
+        and boundary policies are access-level attributes (paper §5.4: the
+        access modifier is per-node), so two handles of the same name may
+        differ in them while sharing one buffer."""
+        return (self.name, self.space, str(self.dtype), self.spec,
+                self.layout, self.partition, self.subblocks)
+
+
+@dataclass(frozen=True)
+class ReductionResult:
+    """Paper's ``ReductionResult<T>`` — a named replicated scalar slot in the
+    executor state.  The 'complete' flag of the paper is subsumed by data
+    flow: any node consuming the value depends on the psum that produced it,
+    per-partition partial reductions still start as soon as their own
+    dependencies are met (XLA reduce + all-reduce decomposition)."""
+
+    name: str
+    dtype: Any = jnp.float32
+    init: float = 0.0
+
+    def value(self, state: dict) -> jax.Array:
+        return state[self.name]
+
+
+def make_reduction_result(
+    name: str, init: float = 0.0, dtype: Any = jnp.float32
+) -> ReductionResult:
+    return ReductionResult(name=name, dtype=dtype, init=init)

@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic, shard-aware token streams with prefetch."""
+
+from .pipeline import (MemmapCorpus, SyntheticLM, Prefetcher, make_batches)
+
+__all__ = ["MemmapCorpus", "SyntheticLM", "Prefetcher", "make_batches"]

@@ -1,0 +1,155 @@
+"""Flash attention Pallas kernel — GQA / causal / sliding-window, with
+layout-polymorphic KV storage (Ripple C1 applied to the KV cache).
+
+TPU mapping: q tiles of (block_q, head_dim) live in VMEM; K/V stay in
+``ANY`` (HBM) and are streamed block-by-block with running-softmax
+accumulation (online softmax).  block_q/block_k are the VMEM knobs and
+should be multiples of 128 for MXU alignment.
+
+KV layouts (DESIGN.md §5):
+  * SOA — separate ``k`` and ``v`` arrays (B, Hkv, S, D): streaming reads
+    are contiguous per tensor;
+  * AOS — one fused array (B, Hkv, S, 2, D) interleaving k/v per position:
+    one DMA fetches both, at the cost of a strided minor dim.
+
+Causal masking supports a query-position offset so the same kernel serves
+training (offset 0), chunked prefill (offset = chunk start) and scoring.
+Sliding-window (``window``) implements gemma3 / recurrentgemma local
+attention; the kv block loop is *clipped* to the causal/window range so
+skipped blocks cost nothing (the paper's dependency-minimal scheduling,
+at the kernel level).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    skv: int,
+    q_offset: int,
+    fused_kv: bool,
+    q_ref,
+    *kv_refs,
+):
+    o_ref = kv_refs[-1]
+    kv_refs = kv_refs[:-1]
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    qi = pl.program_id(2)
+    group = q_ref.shape[1]  # == 1 block over q heads; see caller
+    del group
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (block_q, D)
+    d = q.shape[-1]
+    n_kv_heads = kv_refs[0].shape[1]
+    n_q_heads = pl.num_programs(1)
+    hkv = h // max(1, n_q_heads // n_kv_heads)
+
+    q_pos = q_offset + qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    # clip the kv loop to the causal / window range (block skipping)
+    if causal:
+        hi_pos = q_offset + (qi + 1) * block_q  # exclusive
+        hi = (hi_pos + block_k - 1) // block_k
+        hi = min(hi, skv // block_k) if isinstance(hi, int) else jnp.minimum(
+            hi, skv // block_k)
+    else:
+        hi = skv // block_k
+    if window is not None:
+        lo_pos = q_offset + qi * block_q - window
+        lo = jnp.maximum(lo_pos // block_k, 0) if not isinstance(
+            lo_pos, int) else max(lo_pos // block_k, 0)
+    else:
+        lo = 0
+
+    def load_kv(kb):
+        start = kb * block_k
+        if fused_kv:
+            kv = kv_refs[0][b, hkv, pl.ds(start, block_k)]  # (bk, 2, D)
+            return kv[:, 0].astype(jnp.float32), kv[:, 1].astype(jnp.float32)
+        k = kv_refs[0][b, hkv, pl.ds(start, block_k)].astype(jnp.float32)
+        v = kv_refs[1][b, hkv, pl.ds(start, block_k)].astype(jnp.float32)
+        return k, v
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k, v = load_kv(kb)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = jnp.ones(s.shape, dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    acc = jnp.zeros((q.shape[0], d), jnp.float32)
+    m = jnp.full((q.shape[0],), NEG_INF, jnp.float32)
+    l = jnp.zeros((q.shape[0],), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc, m, l))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array | None = None,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D).  SOA: k,v each (B, Hkv, Skv, D).
+    AOS: pass fused kv as ``k`` with shape (B, Hkv, Skv, 2, D), v=None."""
+    fused = v is None
+    B, Hq, Sq, D = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, skv)
+    assert Sq % block_q == 0 and skv % block_k == 0
+    grid = (B, Hq, Sq // block_q)
+
+    kern = functools.partial(
+        _attn_kernel, scale, causal, window, block_q, block_k, skv,
+        q_offset, fused)
+    in_specs = [pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+                pl.BlockSpec(memory_space=pl.ANY)]
+    operands = [q, k]
+    if not fused:
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+        operands.append(v)
+
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+        interpret=interpret,
+    )(*operands)

@@ -1,0 +1,34 @@
+"""Public attention ops: pallas flash for training/prefill, jnp fallback,
+fused-AoS and split-SoA KV entry points."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import decode_ref, mha_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "scale",
+                                   "block_q", "block_k", "use_pallas",
+                                   "interpret"))
+def flash_attention(q, k, v=None, *, causal=True, window=None, q_offset=0,
+                    scale=None, block_q=128, block_k=128,
+                    use_pallas=True, interpret=True):
+    """SOA path: (q, k, v); AOS path: (q, kv_fused, None) with kv
+    (B, Hkv, S, 2, D)."""
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            scale=scale, block_q=block_q, block_k=block_k,
+            interpret=interpret)
+    if v is None:
+        k, v = k[..., 0, :], k[..., 1, :]
+    return mha_ref(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                   scale=scale)
+
+
+attention_decode = decode_ref

@@ -1,0 +1,82 @@
+"""Pure-jnp oracle for flash attention (GQA / causal / window / decode)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    """q: (B, Hq, Sq, D); k,v: (B, Hkv, Skv, D).  GQA via head repetition.
+
+    ``kv_len`` (per-batch, int) masks cache positions >= len (decode)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    group = Hq // Hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    if kv_len is not None:
+        valid = k_pos[None, :] < kv_len[:, None]  # (B, Skv)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_len: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token decode: q (B, Hq, 1, D) against a cache of capacity S;
+    positions >= kv_len are masked; window measured from kv_len - 1."""
+    out = mha_ref(q, k_cache, v_cache, causal=False, window=None, scale=scale,
+                  kv_len=kv_len if window is None else None)
+    if window is not None:
+        Skv = k_cache.shape[2]
+        k_pos = jnp.arange(Skv)
+        cur = kv_len - 1  # (B,)
+        valid = (k_pos[None] <= cur[:, None]) & (
+            k_pos[None] > cur[:, None] - window)
+        B, Hq, _, D = q.shape
+        scale_ = scale if scale is not None else 1.0 / math.sqrt(D)
+        group = Hq // k_cache.shape[1]
+        k = jnp.repeat(k_cache, group, axis=1) if group > 1 else k_cache
+        v = jnp.repeat(v_cache, group, axis=1) if group > 1 else v_cache
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale_
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p,
+                         v.astype(jnp.float32)).astype(q.dtype)
+    return out

@@ -1,0 +1,90 @@
+"""Eikonal FIM Pallas kernel (paper §7.4, Table 5).
+
+Solves ``|grad phi| = 1/f`` (f = 1: signed-distance reinit) with the Fast
+Iterative Method.  The paper's winning configuration stages a tile in
+shared memory and runs several update sweeps on it before writing back;
+on TPU each grid program DMAs a halo-inclusive tile into VMEM and runs
+``inner`` Jacobi sweeps with frozen halos (the FIM ghost-zone trade),
+then the outer loop (graph-level, with halo exchange + convergence
+reduction — paper's conditional MapReduce) repeats until converged.
+
+The Godunov upwind update in 2-D (f=1, grid step h):
+
+    a = min(phi_W, phi_E);  b = min(phi_S, phi_N)
+    phi' = min(a, b) + h                      if |a - b| >= h
+         = (a + b + sqrt(2 h^2 - (a-b)^2))/2  otherwise
+    phi  = min(phi, phi')   (monotone descent; sources pinned)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def godunov_update(phi: jax.Array, mask: jax.Array, h: float) -> jax.Array:
+    """One Jacobi sweep on a haloed tile; interior cells updated only.
+
+    ``phi``: (m+2, n+2); ``mask``: (m, n) True where source (pinned).
+    Returns the updated *interior* (m, n).
+    """
+    w = phi[:-2, 1:-1]
+    e = phi[2:, 1:-1]
+    s = phi[1:-1, :-2]
+    n = phi[1:-1, 2:]
+    c = phi[1:-1, 1:-1]
+    a = jnp.minimum(w, e)
+    b = jnp.minimum(s, n)
+    lo = jnp.minimum(a, b)
+    diff = jnp.abs(a - b)
+    two = jnp.asarray(2.0, phi.dtype)
+    quad = 0.5 * (a + b + jnp.sqrt(jnp.maximum(two * h * h - diff * diff, 0.0)))
+    new = jnp.where(diff >= h, lo + h, quad)
+    new = jnp.minimum(c, new)
+    return jnp.where(mask, c, new)
+
+
+def _fim_kernel(bx: int, by: int, inner: int, h: float,
+                phi_ref, mask_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    tile = phi_ref[pl.ds(i * bx, bx + 2), pl.ds(j * by, by + 2)]
+    mask = mask_ref[pl.ds(i * bx, bx), pl.ds(j * by, by)]
+
+    def body(_, t):
+        interior = godunov_update(t, mask, h)
+        return t.at[1:-1, 1:-1].set(interior)
+
+    tile = jax.lax.fori_loop(0, inner, body, tile)
+    o_ref[...] = tile[1:-1, 1:-1]
+
+
+def eikonal_fim_pallas(
+    phi_haloed: jax.Array,
+    source_mask: jax.Array,
+    h: float,
+    *,
+    inner: int = 4,
+    block: tuple[int, int] = (8, 128),
+    interpret: bool = True,
+) -> jax.Array:
+    """``inner`` VMEM-staged FIM sweeps per tile.  ``phi_haloed`` is
+    (nx+2, ny+2); ``source_mask`` is (nx, ny); returns (nx, ny)."""
+    nx, ny = (s - 2 for s in phi_haloed.shape)
+    bx, by = (min(block[0], nx), min(block[1], ny))
+    assert nx % bx == 0 and ny % by == 0, (nx, ny, bx, by)
+    grid = (nx // bx, ny // by)
+    return pl.pallas_call(
+        partial(_fim_kernel, bx, by, inner, h),
+        out_shape=jax.ShapeDtypeStruct((nx, ny), phi_haloed.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bx, by), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(phi_haloed, source_mask)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the eikonal FIM sweep."""
+
+from functools import partial
+
+import jax
+
+from .kernel import eikonal_fim_pallas
+from .ref import eikonal_fim_ref
+
+
+@partial(jax.jit,
+         static_argnames=("h", "inner", "block", "use_pallas", "interpret"))
+def eikonal_fim_sweep(phi_haloed, source_mask, h, *, inner: int = 4,
+                      block=(8, 128), use_pallas: bool = True,
+                      interpret: bool = True):
+    if use_pallas:
+        return eikonal_fim_pallas(phi_haloed, source_mask, h, inner=inner,
+                                  block=block, interpret=interpret)
+    return eikonal_fim_ref(phi_haloed, source_mask, h, inner=inner, block=block)

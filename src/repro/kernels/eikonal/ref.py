@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the FIM kernel: identical block semantics
+(frozen-halo inner sweeps per tile), plus a global-Jacobi reference used
+for convergence testing."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import godunov_update
+
+
+def eikonal_fim_ref(
+    phi_haloed: jax.Array,
+    source_mask: jax.Array,
+    h: float,
+    *,
+    inner: int = 4,
+    block: tuple[int, int] = (8, 128),
+) -> jax.Array:
+    nx, ny = (s - 2 for s in phi_haloed.shape)
+    bx, by = (min(block[0], nx), min(block[1], ny))
+    gx, gy = nx // bx, ny // by
+
+    def tile_update(i, j):
+        tile = jax.lax.dynamic_slice(phi_haloed, (i * bx, j * by),
+                                     (bx + 2, by + 2))
+        mask = jax.lax.dynamic_slice(source_mask, (i * bx, j * by), (bx, by))
+
+        def body(_, t):
+            return t.at[1:-1, 1:-1].set(godunov_update(t, mask, h))
+
+        tile = jax.lax.fori_loop(0, inner, body, tile)
+        return tile[1:-1, 1:-1]
+
+    rows = []
+    for i in range(gx):
+        cols = [tile_update(i, j) for j in range(gy)]
+        rows.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+def eikonal_global_jacobi(
+    phi: jax.Array, source_mask: jax.Array, h: float, iters: int
+) -> jax.Array:
+    """Whole-grid Jacobi iteration (transmissive edges) — convergence
+    oracle: both block-FIM and this converge to the same viscosity
+    solution (the distance field for f = 1)."""
+
+    def body(_, p):
+        pad = jnp.pad(p, 1, mode="edge")
+        return godunov_update(pad, source_mask, h)
+
+    return jax.lax.fori_loop(0, iters, body, phi)

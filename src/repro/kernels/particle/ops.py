@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the particle update."""
+
+from functools import partial
+
+import jax
+
+from .kernel import PARTICLE_SPEC, particle_update_pallas
+from .ref import particle_update_ref
+
+
+@partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
+def particle_update(particles, dt, *, block: int = 512, use_pallas: bool = True,
+                    interpret: bool = True):
+    if use_pallas:
+        return particle_update_pallas(particles, dt, block=block,
+                                      interpret=interpret)
+    return particle_update_ref(particles, dt)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the particle update."""
+
+from repro.core.layout import RecordArray
+
+
+def particle_update_ref(particles: RecordArray, dt: float) -> RecordArray:
+    x = particles.field("x")
+    v = particles.field("v")
+    return particles.set_field("x", x + v * dt)

@@ -1,0 +1,18 @@
+"""Jitted public wrapper for SAXPY."""
+
+from functools import partial
+
+import jax
+
+from .kernel import saxpy_pallas
+from .ref import saxpy_ref
+
+
+@partial(jax.jit, static_argnames=("block", "bounds_check", "use_pallas",
+                                   "interpret"))
+def saxpy(a, x, y, *, block: int = 1024, bounds_check: bool = True,
+          use_pallas: bool = True, interpret: bool = True):
+    if use_pallas:
+        return saxpy_pallas(a, x, y, block=block, bounds_check=bounds_check,
+                            interpret=interpret)
+    return saxpy_ref(a, x, y)

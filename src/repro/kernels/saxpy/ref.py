@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the SAXPY kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def saxpy_ref(a, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.asarray(a, dtype=x.dtype) * x + y

@@ -1,0 +1,114 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+The chunked dual form splits SSD into (a) an intra-chunk quadratic part —
+the FLOPs-dominant, MXU-friendly piece, computed here per (batch, head,
+chunk) tile in VMEM — and (b) a cheap inter-chunk state scan left to XLA
+(see ref.ssd_chunked).  The kernel also emits each chunk's outgoing state
+contribution so the host-side scan needs no second data pass.
+
+Tile: x (L, P), dt (L,), B/C (L, N) with L = chunk, all staged in VMEM;
+matmuls (L,N)x(N,L) and (L,L)x(L,P) map to the MXU at L,P,N multiples
+of 128 (L=chunk is the block knob).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(chunk: int,
+                      x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, s_ref):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    h = pl.program_id(2)
+    L = chunk
+
+    x = x_ref[b, pl.ds(c * L, L), h, :].astype(jnp.float32)      # (L, P)
+    dt = dt_ref[b, pl.ds(c * L, L), h].astype(jnp.float32)       # (L,)
+    A = a_ref[h].astype(jnp.float32)                             # ()
+    Bm = b_ref[b, pl.ds(c * L, L), :].astype(jnp.float32)        # (L, N)
+    C = c_ref[b, pl.ds(c * L, L), :].astype(jnp.float32)         # (L, N)
+
+    cs = jnp.cumsum(dt * A)                                      # (L,)
+    seg = cs[:, None] - cs[None, :]
+    mask = jax.lax.iota(jnp.int32, L)[:, None] >= \
+        jax.lax.iota(jnp.int32, L)[None, :]
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)                   # (L, L)
+    cb = jax.lax.dot_general(C, Bm, (((1,), (1,)), ((), ())))    # (L, L)
+    scores = cb * decay
+    dx = dt[:, None] * x                                         # (L, P)
+    y = scores @ dx                                              # (L, P)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # outgoing state contribution: sum_j exp(cs_L - cs_j) dt_j x_j B_j^T
+    d2e = jnp.exp(cs[-1] - cs)                                   # (L,)
+    w = (dt * d2e)[:, None] * x                                  # (L, P)
+    s = jax.lax.dot_general(w, Bm, (((0,), (0,)), ((), ())))     # (P, N)
+    s_ref[0, 0, 0] = s.astype(s_ref.dtype)
+
+
+def ssd_intra_chunk_pallas(x, dt, A, Bm, C, *, chunk: int = 64,
+                           interpret: bool = True):
+    """Returns (y_intra (B,S,H,P), s_chunk (B,nc,H,P,N)) — feed s_chunk to
+    the inter-chunk scan in ref.ssd_chunked form."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    grid = (B_, nc, H)
+
+    kern = functools.partial(_ssd_chunk_kernel, chunk)
+    y, s = pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((B_, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B_, nc, H, P, N), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 5,
+        out_specs=(
+            pl.BlockSpec((1, chunk, 1, P), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+        ),
+        interpret=interpret,
+    )(x, dt, A, Bm, C)
+    return y, s
+
+
+def ssd_pallas(x, dt, A, Bm, C, D=None, init_state=None, *, chunk: int = 64,
+               interpret: bool = True):
+    """Full SSD with the Pallas intra-chunk kernel + XLA inter-chunk scan."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    nc = S // chunk
+    y_intra, s_chunk = ssd_intra_chunk_pallas(
+        x, dt, A, Bm, C, chunk=chunk, interpret=interpret)
+
+    dtc = dt.reshape(B_, nc, chunk, H).astype(f32)
+    cs = jnp.cumsum(dtc * A, axis=2)
+    total = jnp.exp(cs[:, :, -1, :])  # (B, nc, H)
+    state0 = (jnp.zeros((B_, H, P, N), f32)
+              if init_state is None else init_state.astype(f32))
+
+    def step(state, inp):
+        s_c, tot = inp
+        return state * tot[..., None, None] + s_c, state
+
+    final_state, entering = jax.lax.scan(
+        step, state0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)  # (B, nc, H, P, N)
+
+    cc = C.reshape(B_, nc, chunk, N).astype(f32)
+    in_decay = jnp.exp(cs)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, entering, in_decay)
+    y = y_intra.astype(f32) + y_inter.reshape(B_, nc, chunk, H, P).reshape(
+        B_, S, H, P)
+    if D is not None:
+        y = y + x.astype(f32) * D[None, None, :, None]
+    return y.astype(x.dtype), final_state

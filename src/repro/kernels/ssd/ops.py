@@ -1,0 +1,17 @@
+"""Jitted public wrapper for SSD."""
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_pallas
+from .ref import ssd_chunked, ssd_decode_step, ssd_naive
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd(x, dt, A, Bm, C, D=None, init_state=None, *, chunk: int = 64,
+        use_pallas: bool = True, interpret: bool = True):
+    if use_pallas:
+        return ssd_pallas(x, dt, A, Bm, C, D, init_state, chunk=chunk,
+                          interpret=interpret)
+    return ssd_chunked(x, dt, A, Bm, C, D, init_state, chunk=chunk)

@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for Mamba-2 SSD (state-space duality, arXiv:2405.21060).
+
+``ssd_naive``   — token-by-token linear recurrence (ground truth).
+``ssd_chunked`` — chunked dual form: intra-chunk (quadratic within L) +
+                  inter-chunk state scan; exact, and the structure the
+                  Pallas kernel implements.
+
+Shapes (n_groups = 1):
+  x  (B, S, H, P)   dt (B, S, H)    A (H,) negative
+  Bm (B, S, N)      C  (B, S, N)    D (H,) skip
+  y  (B, S, H, P)   state (B, H, P, N)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_naive(x, dt, A, Bm, C, D=None, init_state=None):
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    state0 = (jnp.zeros((B_, H, P, N), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs  # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(dtt * A)  # (B,H)
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        state = state * da[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B, S, H, P)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def _segsum(cs):
+    """segsum(cs)[i, j] = cs[i] - cs[j] (lower-triangular mask applied by
+    caller); cs is the inclusive cumulative sum of dA_log within a chunk."""
+    return cs[..., :, None] - cs[..., None, :]
+
+
+def ssd_chunked(x, dt, A, Bm, C, D=None, init_state=None, chunk: int = 64):
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(B_, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(B_, nc, chunk, H).astype(f32)
+    bc = Bm.reshape(B_, nc, chunk, N).astype(f32)
+    cc = C.reshape(B_, nc, chunk, N).astype(f32)
+
+    da_log = dtc * A  # (B, nc, L, H)
+    cs = jnp.cumsum(da_log, axis=2)  # inclusive
+
+    # -- intra-chunk (the FLOPs-dominant dual form) -------------------------
+    seg = _segsum(jnp.moveaxis(cs, 3, 2))  # (B, nc, H, L, L)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B, nc, L, L)
+    scores = cb[:, :, None] * decay  # (B, nc, H, L, L)
+    dx = dtc[..., None] * xc  # (B, nc, L, H, P)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, dx)
+
+    # -- chunk states ---------------------------------------------------
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # (B, nc, L, H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, dtc * decay_to_end, xc)
+
+    # -- inter-chunk state scan ------------------------------------------
+    total = jnp.exp(cs[:, :, -1, :])  # (B, nc, H) decay across whole chunk
+    state0 = (jnp.zeros((B_, H, P, N), f32)
+              if init_state is None else init_state.astype(f32))
+
+    def step(state, inp):
+        s_c, tot = inp  # (B,H,P,N), (B,H)
+        new = state * tot[..., None, None] + s_c
+        return new, state  # emit the state *entering* the chunk
+
+    states_seq = (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0))
+    final_state, entering = jax.lax.scan(step, state0, states_seq)
+    entering = jnp.moveaxis(entering, 0, 1)  # (B, nc, H, P, N)
+
+    # -- inter-chunk contribution ----------------------------------------
+    in_decay = jnp.exp(cs)  # decay from chunk start to position i
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, entering, in_decay)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    if D is not None:
+        y = y + x.astype(f32) * D[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, xt, dtt, A, bt, ct, D=None):
+    """Single-token recurrent step for serving (constant memory).
+
+    state (B,H,P,N); xt (B,H,P); dtt (B,H); bt/ct (B,N)."""
+    f32 = jnp.float32
+    state = state.astype(f32)
+    da = jnp.exp(dtt.astype(f32) * A)
+    upd = (dtt.astype(f32)[..., None] * xt.astype(f32))[..., None] \
+        * bt.astype(f32)[:, None, None, :]
+    state = state * da[..., None, None] + upd
+    yt = jnp.einsum("bhpn,bn->bhp", state, ct.astype(f32))
+    if D is not None:
+        yt = yt + xt.astype(f32) * D[None, :, None]
+    return state, yt.astype(xt.dtype)

@@ -1,0 +1,81 @@
+"""FORCE flux-difference Pallas kernel (paper §7.3, Table 4).
+
+Stencil over a haloed 2-D Euler state record, layout polymorphic:
+
+* the haloed input stays in ``ANY`` (HBM) memory space; each grid program
+  DMAs its halo-inclusive tile ``(bx+2, by+2)`` into VMEM — this IS the
+  paper's ``in_shared()`` staging on TPU (DESIGN.md §2 C2);
+* SoA tiles arrive component-major (zero relayout); AoS tiles are
+  transposed on load — the layout cost the paper measures;
+* block shape = the paper's sub-partition knob (§4.1), hardware-aligned
+  to multiples of (8, 128) for the VPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.layout import Layout, RecordArray
+from repro.physics import euler
+
+
+def _flux_kernel(layout: Layout, bx: int, by: int, u_ref, lam_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    # stage halo-inclusive tile into VMEM (paper's shared-memory load)
+    if layout is Layout.SOA:
+        tile = u_ref[:, pl.ds(i * bx, bx + 2), pl.ds(j * by, by + 2)]
+    else:
+        tile = u_ref[pl.ds(i * bx, bx + 2), pl.ds(j * by, by + 2), :]
+        tile = jnp.moveaxis(tile, -1, 0)  # AoS relayout cost
+    lam_x = lam_ref[0]
+    lam_y = lam_ref[1]
+    out = euler.flux_difference(tile, lam_x, lam_y)  # (4, bx, by)
+    if layout is Layout.SOA:
+        o_ref[...] = out
+    else:
+        o_ref[...] = jnp.moveaxis(out, 0, -1)
+
+
+def flux_difference_pallas(
+    state_haloed: RecordArray,
+    lam_x: float,
+    lam_y: float,
+    *,
+    block: tuple[int, int] = (8, 128),
+    interpret: bool = True,
+) -> RecordArray:
+    """Paper Table 4: sum of FORCE flux differences over both dims.
+
+    ``state_haloed`` has space ``(nx+2, ny+2)``; returns space ``(nx, ny)``.
+    """
+    layout = state_haloed.layout
+    nx, ny = (s - 2 for s in state_haloed.space)
+    bx, by = block
+    bx, by = min(bx, nx), min(by, ny)
+    assert nx % bx == 0 and ny % by == 0, (nx, ny, bx, by)
+    grid = (nx // bx, ny // by)
+
+    out_shape = RecordArray.storage_shape(state_haloed.spec, (nx, ny), layout)
+    if layout is Layout.SOA:
+        out_spec = pl.BlockSpec((4, bx, by), lambda i, j: (0, i, j))
+    else:
+        out_spec = pl.BlockSpec((bx, by, 4), lambda i, j: (i, j, 0))
+
+    lam = jnp.asarray([lam_x, lam_y], dtype=state_haloed.dtype)
+    out = pl.pallas_call(
+        partial(_flux_kernel, layout, bx, by),
+        out_shape=jax.ShapeDtypeStruct(out_shape, state_haloed.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=out_spec,
+        interpret=interpret,
+    )(state_haloed.data, lam)
+    return RecordArray(out, state_haloed.spec, layout)

@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the FORCE flux-difference stencil."""
+
+from functools import partial
+
+import jax
+
+from .kernel import flux_difference_pallas
+from .ref import flux_difference_ref
+
+
+@partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
+def flux_difference(state_haloed, lam_x, lam_y, *, block=(8, 128),
+                    use_pallas: bool = True, interpret: bool = True):
+    if use_pallas:
+        return flux_difference_pallas(state_haloed, lam_x, lam_y, block=block,
+                                      interpret=interpret)
+    return flux_difference_ref(state_haloed, lam_x, lam_y)

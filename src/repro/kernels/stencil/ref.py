@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the FORCE flux-difference stencil."""
+
+from repro.core.layout import RecordArray
+from repro.physics import euler
+
+
+def flux_difference_ref(
+    state_haloed: RecordArray, lam_x: float, lam_y: float
+) -> RecordArray:
+    U = euler.stack_state(state_haloed)
+    out = euler.flux_difference(U, lam_x, lam_y)
+    like = RecordArray(
+        state_haloed.data, state_haloed.spec, state_haloed.layout
+    )
+    # build an un-haloed record with the same layout
+    import jax.numpy as jnp
+
+    from repro.core.layout import Layout
+
+    data = out if state_haloed.layout is Layout.SOA else jnp.moveaxis(out, 0, -1)
+    return RecordArray(data, state_haloed.spec, state_haloed.layout)

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the step function (train_step / prefill_step / decode_step by
+     shape kind) and its ShapeDtypeStruct inputs (no allocation),
+  3. ``jax.jit(...).lower(...).compile()`` — the SPMD partitioner must
+     accept every sharding and the buffer assignment must fit,
+  4. records memory_analysis(), cost_analysis(), and the collective-op
+     byte census parsed from the optimized HLO (for EXPERIMENTS.md
+     §Dry-run and the §Roofline analysis).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+from repro.models.config import SHAPES, shapes_for
+
+# per-device collective cost model (bytes through the links), ring algs
+_COLL_FACTORS = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _first_shape_bytes(sig: str) -> int:
+    """Bytes of the first (or tuple-summed) shape in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Sum per-device collective bytes by op kind from optimized HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_FACTORS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start)?\(", ls)
+        if not m:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        b = _first_shape_bytes(sig)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    out["total_link_bytes"] = sum(
+        v["bytes"] * _COLL_FACTORS[k] for k, v in out.items()
+        if k in _COLL_FACTORS)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.kind == "train":
+        step_fn, opt = S.make_train_step(cfg, mesh)
+        state_sds, state_pspecs = S.train_state_specs(cfg, mesh, opt)
+        batch_sds = S.input_specs(cfg, shape, mesh)
+        fn = jax.jit(step_fn, donate_argnums=0)
+        args = (state_sds, batch_sds)
+    elif shape.kind == "prefill":
+        step_fn = S.make_prefill_step(cfg, mesh, shape)
+        p_sds, _ = S.param_specs(cfg, mesh)
+        batch_sds = S.input_specs(cfg, shape, mesh)
+        fn = jax.jit(step_fn)
+        args = (p_sds, batch_sds)
+    else:  # decode
+        step_fn = S.make_decode_step(cfg, mesh, shape)
+        p_sds, _ = S.param_specs(cfg, mesh)
+        c_sds, _ = S.decode_state_specs(cfg, shape, mesh)
+        tok_sds = S.input_specs(cfg, shape, mesh)["tokens"]
+        fn = jax.jit(step_fn, donate_argnums=1)
+        args = (p_sds, c_sds, tok_sds)
+    return cfg, shape, mesh, fn, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    t0 = time.time()
+    cfg, shape, mesh, fn, args = build_cell(arch, shape_name, multi_pod)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    t2 = time.time()
+    loopaware = analyze_hlo(compiled.as_text())
+    t_analyze = time.time() - t2
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(n_dev),
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # loop-aware per-device numbers (repro.analysis.hlo; cost_analysis
+        # counts while bodies once, so it is kept only as xla_* reference)
+        "flops": float(loopaware["flops"]),
+        "bytes_accessed": float(loopaware["bytes"]),
+        "collective_link_bytes": float(loopaware["collective_link_bytes"]),
+        "collectives": loopaware["collectives"],
+        "xla_flops_body_once": float(cost.get("flops", 0.0)),
+        "xla_bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+        "peak_memory_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+              f"analyze {t_analyze:.0f}s\n"
+              f"  flops/dev={rec['flops']:.3e}  "
+              f"bytes/dev={rec['bytes_accessed']:.3e}  "
+              f"link_bytes/dev={rec['collective_link_bytes']/2**30:.3f}GiB  "
+              f"temp/dev={rec['temp_bytes']/2**30:.2f}GiB")
+        print(f"  memory_analysis: {mem}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            cfg = configs.get(arch)
+            for shape in shapes_for(cfg):
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((configs.ALIASES.get(args.arch, args.arch), args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    failed = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                results.append(run_cell(arch, shape, mp))
+            except Exception as e:
+                failed += 1
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "ok": False, "error": f"{type(e).__name__}: {e}"})
+            finally:
+                jax.clear_caches()  # 66 compiled cells would exhaust host RAM
+            if args.out:  # checkpoint partial results (long run)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {len(results)} records to {args.out}")
+    print(f"[dryrun] {len(results) - failed}/{len(results)} cells OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

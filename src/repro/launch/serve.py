@@ -1,0 +1,76 @@
+"""Serving launcher: prefill + batched greedy decode loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+      --batch 4 --prompt-len 16 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.launch import steps as S
+from repro.models.lm import init_lm
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0), tp=1)
+    prefill_fn = jax.jit(S.make_prefill_step(cfg, None),
+                         static_argnames=())
+    decode_fn = jax.jit(S.make_decode_step(cfg, None), donate_argnums=1)
+
+    rng = np.random.default_rng(0)
+    B = args.batch
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, args.prompt_len)).astype(np.int32))}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(rng.standard_normal(
+            (B, S.ENC_LEN_SERVE, cfg.frontend_dim)).astype(np.float32))
+    elif cfg.frontend_dim:
+        batch["patches"] = jnp.asarray(rng.standard_normal(
+            (B, cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32))
+
+    t0 = time.time()
+    max_seq = args.prompt_len + args.gen + (
+        cfg.frontend_tokens if cfg.frontend_dim and not cfg.is_encdec else 0)
+    from repro.models.blocks import ShardCtx
+    from repro.models.lm import prefill as prefill_raw
+    logits, caches = jax.jit(
+        lambda p, b: prefill_raw(p, b, cfg, ShardCtx(), max_seq=max_seq)
+    )(params, batch)
+    t_prefill = time.time() - t0
+    toks = jnp.argmax(logits, axis=-1)
+    out_tokens = [np.asarray(toks)]
+    t1 = time.time()
+    for _ in range(args.gen - 1):
+        logits, caches = decode_fn(params, caches, toks)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_tokens.append(np.asarray(toks))
+    jax.block_until_ready(toks)
+    t_decode = time.time() - t1
+    gen = np.stack(out_tokens, axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"[serve] prefill {t_prefill*1e3:.0f}ms; decode "
+          f"{t_decode/max(args.gen-1,1)*1e3:.1f}ms/tok "
+          f"({B*(args.gen-1)/max(t_decode,1e-9):.1f} tok/s)")
+    print(f"[serve] sample generations (first 3 rows):\n{gen[:3]}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,369 @@
+"""Step builders: sharded train / prefill / decode step functions and the
+ShapeDtypeStruct input/state specs the multi-pod dry-run lowers against.
+
+Sharding scheme (DESIGN.md §5):
+
+  train/prefill   batch over DP axes ("pod","data"); heads / d_ff / vocab /
+                  expert-TP over "model"; experts over "data" (explicit-a2a
+                  EP); residual d_model over "model" between layers
+                  (Megatron SP) so remat-saved carries are TP-sharded;
+                  optimizer moments additionally over DP (ZeRO-1).
+  decode          batch over DP; KV-cache *sequence* over "model"
+                  (flash-decoding LSE combine); ring caches replicated.
+  long_500k (B=1) cache sequence over ALL axes; batch unsharded.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import kvcache as kvc
+from repro.models.blocks import ShardCtx
+from repro.models.common import DEFAULT_RULES, spec_tree_to_pspecs
+from repro.models.config import ModelConfig, ShapeCfg
+from repro.models.lm import (decode_step, forward_loss, init_caches, init_lm,
+                             prefill)
+from repro.models.moe import make_moe_a2a
+from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
+from .mesh import dp_axes, tp_size
+
+ENC_LEN_SERVE = 4096  # frozen encoder length for enc-dec decode cells
+
+
+# ---------------------------------------------------------------------------
+# rules / ctx
+# ---------------------------------------------------------------------------
+
+def fsdp_pspec(shape: tuple, mesh: Mesh) -> P:
+    """ZeRO-3 placement: shard the first dim divisible by the flat mesh
+    (data x model), falling back to model-only / data-only / replicated.
+    XLA inserts the per-layer weight all-gather inside the layer scan."""
+    axes_options = [tuple(a for a in ("data", "model")
+                          if mesh.shape.get(a, 1) > 1),
+                    ("model",), ("data",)]
+    for axes in axes_options:
+        if not axes or any(a not in mesh.shape for a in axes):
+            continue
+        n = math.prod(mesh.shape[a] for a in axes)
+        if n <= 1:
+            continue
+        for i, s in enumerate(shape):
+            if s % n == 0 and s >= n:
+                entries: list = [None] * len(shape)
+                entries[i] = axes if len(axes) > 1 else axes[0]
+                return P(*entries)
+    return P()
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh) -> dict:
+    rules = dict(DEFAULT_RULES)
+    tp = tp_size(mesh)
+    if tp <= 1 or cfg.train_sharding == "fsdp":
+        return {k: None for k in rules}
+    if cfg.n_kv_heads % tp:
+        rules["kv_heads"] = None
+    if cfg.d_ff and cfg.d_ff % tp:
+        rules["ff"] = None
+    if cfg.lru_width and cfg.lru_width % tp:
+        rules["rnn"] = None
+    if cfg.n_experts:
+        data = mesh.shape.get("data", 1)
+        if data > 1 and cfg.n_experts % data == 0:
+            rules["experts"] = "data"
+            rules["expert_ff"] = "model" if cfg.d_ff % tp == 0 else None
+        elif cfg.n_experts % tp == 0:
+            rules["experts"] = "model"
+            rules["expert_ff"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_ff"] = "model" if cfg.d_ff % tp == 0 else None
+    return rules
+
+
+def make_ctx(cfg: ModelConfig, mesh: Optional[Mesh],
+             shape: Optional[ShapeCfg] = None) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx()
+    rules = make_rules(cfg, mesh)
+    dp = dp_axes(mesh)
+    batch_axes: tuple = dp
+    seq_axes: tuple = ()
+    moe_a2a = None
+    if cfg.train_sharding == "fsdp" and (shape is None
+                                         or shape.kind == "train"):
+        # batch over as many axes as divide the PER-MICROBATCH batch
+        # (ZeRO-3 data parallelism; grad accumulation shrinks the live
+        # batch, so mb > 1 can force dp-only sharding — see EXPERIMENTS
+        # §Perf cell 1 iter 4, where the naive combination replicated
+        # compute 2x)
+        B = (shape.global_batch // max(cfg.microbatches, 1)
+             if shape is not None else 0)
+        for cand in (dp + ("model",), dp):
+            n = math.prod(mesh.shape[a] for a in cand)
+            if B == 0 or B % n == 0:
+                batch_axes = cand
+                break
+        return ShardCtx(mesh=mesh, rules=rules, batch_axes=batch_axes,
+                        residual_tp=False)
+    if shape is not None and shape.is_decode:
+        if shape.global_batch == 1:
+            batch_axes = ()
+            seq_axes = tuple(mesh.axis_names)       # all axes shard the cache
+        else:
+            seq_axes = ("model",) if tp_size(mesh) > 1 else ()
+    elif cfg.n_experts and rules.get("experts") == "data" \
+            and (shape is None or not shape.is_decode):
+        moe_a2a = make_moe_a2a(mesh, dp_axes=dp, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               residual_tp=cfg.shard_activations)
+    return ShardCtx(mesh=mesh, rules=rules, batch_axes=batch_axes,
+                    decode_seq_axes=seq_axes,
+                    residual_tp=cfg.shard_activations and tp_size(mesh) > 1,
+                    moe_a2a=moe_a2a)
+
+
+# ---------------------------------------------------------------------------
+# params: shapes + shardings (no allocation)
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    """-> (param ShapeDtypeStructs WITH shardings, pspec tree)."""
+    tp = 1 if cfg.train_sharding == "fsdp" else tp_size(mesh)
+    shapes = jax.eval_shape(lambda k: init_lm(cfg, k, tp)[0],
+                            jax.random.PRNGKey(0))
+    spec_tree = init_specs_only(cfg, tp)
+    rules = make_rules(cfg, mesh)
+    pspecs = spec_tree_to_pspecs(spec_tree, rules)
+    if cfg.train_sharding == "fsdp":
+        pspecs = jax.tree.map(lambda s: fsdp_pspec(s.shape, mesh), shapes)
+    sds = jax.tree.map(
+        lambda s, ps: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, ps)),
+        shapes, pspecs)
+    return sds, pspecs
+
+
+_SPEC_CACHE: dict = {}
+
+
+def init_specs_only(cfg: ModelConfig, tp: int):
+    key = (cfg, tp)
+    if key not in _SPEC_CACHE:
+        # tracing init_lm just for the spec tree is cheap under eval_shape;
+        # specs are returned as aux (static python objects survive)
+        holder = {}
+
+        def fn(k):
+            p, s = init_lm(cfg, k, tp)
+            holder["specs"] = s
+            return p
+
+        jax.eval_shape(fn, jax.random.PRNGKey(0))
+        _SPEC_CACHE[key] = holder["specs"]
+    return _SPEC_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# input specs per shape cell
+# ---------------------------------------------------------------------------
+
+def batch_arrays(cfg: ModelConfig, shape: ShapeCfg, *, np_like=False):
+    """Concrete small-dtype host arrays for smoke runs (unsharded)."""
+    import numpy as np
+    B, S = shape.global_batch, shape.seq_len
+    S_text = S - (cfg.frontend_tokens if cfg.frontend_dim
+                  and not cfg.is_encdec else 0)
+    rng = np.random.default_rng(0)
+    out = {"tokens": rng.integers(0, cfg.vocab_size, (B, S_text),
+                                  dtype=np.int32)}
+    if shape.kind == "train":
+        out["labels"] = rng.integers(0, cfg.vocab_size, (B, S_text),
+                                     dtype=np.int32)
+    if cfg.is_encdec:
+        enc = S if shape.kind == "train" else ENC_LEN_SERVE
+        out["frames"] = rng.standard_normal((B, enc, cfg.frontend_dim)
+                                            ).astype(np.float32)
+    elif cfg.frontend_dim:
+        out["patches"] = rng.standard_normal(
+            (B, cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for every model input of this (arch x shape) cell."""
+    ctx = make_ctx(cfg, mesh, shape)
+    ba = ctx.ba
+    cdt = cfg.compute_jdtype
+
+    def sds(shape_, dtype, spec):
+        return jax.ShapeDtypeStruct(shape_, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    B, S = shape.global_batch, shape.seq_len
+    if shape.is_decode:
+        return {"tokens": sds((B,), jnp.int32, P(ba))}
+    S_text = S - (cfg.frontend_tokens if cfg.frontend_dim
+                  and not cfg.is_encdec else 0)
+    out = {"tokens": sds((B, S_text), jnp.int32, P(ba, None))}
+    if shape.kind == "train":
+        out["labels"] = sds((B, S_text), jnp.int32, P(ba, None))
+    if cfg.is_encdec:
+        enc = S if shape.kind == "train" else ENC_LEN_SERVE
+        out["frames"] = sds((B, enc, cfg.frontend_dim), cdt, P(ba, None, None))
+    elif cfg.frontend_dim:
+        out["patches"] = sds((B, cfg.frontend_tokens, cfg.frontend_dim), cdt,
+                             P(ba, None, None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode cache specs
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, ctx: ShardCtx):
+    """PartitionSpec tree exactly mirroring init_caches structure."""
+    ba = ctx.ba
+    sa = tuple(ctx.decode_seq_axes) or None
+
+    def kv_specs(seq_sharded: bool, lead: bool):
+        ps = kvc.kv_pspec(cfg.kv_layout, batch_axes=ctx.batch_axes,
+                          seq_axes=(sa if seq_sharded else None),
+                          order=cfg.kv_order)
+        return P(None, *ps) if lead else ps
+
+    def entry(kind: str, lead: bool):
+        ldim = (None,) if lead else ()
+        if kind == "A":
+            e = kv_specs(True, lead)
+        elif kind == "L":
+            e = kv_specs(False, lead)
+        elif kind == "M":
+            e = (P(*ldim, ba, "model" if ctx.tp > 1 else None, None, None),
+                 P(*ldim, ba, None, None))
+        elif kind == "R":
+            r = "model" if (ctx.tp > 1 and cfg.lru_width % ctx.tp == 0) \
+                else None
+            e = (P(*ldim, ba, r), P(*ldim, ba, None, r))
+        else:
+            raise ValueError(kind)
+        if cfg.is_encdec and kind in ("A", "L"):
+            return {"self": e, "cross": kv_specs(True, lead)}
+        return e
+
+    n_groups, pattern, tail = cfg.layer_groups()
+    return {"groups": {f"p{i}": entry(k, True)
+                       for i, k in enumerate(pattern)},
+            "tail": [entry(k, False) for k in tail],
+            "pos": P()}
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh):
+    """ShapeDtypeStructs (with shardings) for the decode cache pytree."""
+    ctx = make_ctx(cfg, mesh, shape)
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = ENC_LEN_SERVE if cfg.is_encdec else 0
+    shapes = jax.eval_shape(
+        lambda: init_caches(None, cfg, B, S, ctx, enc_len=enc_len))
+    pspecs = cache_pspecs(cfg, ctx)
+    return jax.tree.map(
+        lambda s, ps: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, ps)),
+        shapes, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)), pspecs
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh], *,
+                    lr=None, total_steps: int = 10_000,
+                    clip_norm: float = 1.0):
+    """-> train_step(state, batch) -> (state, metrics); state = {params,
+    opt, step}."""
+    ctx = make_ctx(cfg, mesh, None)
+    opt = make_optimizer(cfg.optimizer,
+                         lr or cosine_schedule(3e-4, 200, total_steps))
+    k = cfg.microbatches
+
+    def loss_fn(params, mb):
+        return forward_loss(params, mb, cfg, ctx)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if k > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), acc, g)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, _) = lax.scan(body, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = jnp.mean(losses)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = opt.update(grads, state["opt"], params,
+                                         state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss.astype(jnp.float32),
+                           "grad_norm": gnorm.astype(jnp.float32)}
+
+    return train_step, opt
+
+
+def train_state_specs(cfg: ModelConfig, mesh: Mesh, opt):
+    """ShapeDtypeStructs + shardings for the full train state."""
+    p_sds, p_pspecs = param_specs(cfg, mesh)
+    o_shapes = jax.eval_shape(opt.init, p_sds)
+    o_pspecs = opt.state_pspecs(p_sds, p_pspecs, mesh, dp_axes(mesh),
+                                zero1=cfg.zero1)
+    o_sds = jax.tree.map(
+        lambda s, ps: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, ps)),
+        o_shapes, o_pspecs)
+    step_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+    state_sds = {"params": p_sds, "opt": o_sds, "step": step_sds}
+    state_pspecs = {"params": p_pspecs, "opt": o_pspecs, "step": P()}
+    return state_sds, state_pspecs
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
+                      shape: Optional[ShapeCfg] = None):
+    ctx = make_ctx(cfg, mesh, shape)
+
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, ctx)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh],
+                     shape: Optional[ShapeCfg] = None):
+    ctx = make_ctx(cfg, mesh, shape)
+    enc_len = ENC_LEN_SERVE if cfg.is_encdec else None
+
+    def step(params, caches, tokens):
+        logits, caches = decode_step(params, caches, tokens, cfg, ctx,
+                                     enc_len=enc_len)
+        return logits, caches
+
+    return step

@@ -1,0 +1,469 @@
+"""Layer blocks: attention (global/local/cross), MLP / MoE FFN, and the
+uniform layer wrapper that assembles mixer + FFN with pre/post norms for
+every layer kind ("A" global attn, "L" local attn, "M" Mamba2, "R" RG-LRU).
+
+Every block has three entry points:
+  init_*            parameter + logical-spec construction (TP-padded)
+  *_forward         full-sequence (train / prefill), optionally emitting
+                    the serving cache
+  *_decode          one-token step against the cache
+
+The sharding of every weight is declared once via logical axes
+(models/common.py) — the polymorphic-layout philosophy of the paper: the
+layout/partitioning decision is data, not code.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field as dfield
+from typing import Any, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.layout import Layout
+from . import kvcache as kvc
+from .attention import attention, decode_attention, make_sharded_decode_attention
+from .common import DEFAULT_RULES, ParamTree, layer_norm, rms_norm, rope_cos_sin, apply_rope
+from .config import ModelConfig
+from .moe import init_moe, moe_block
+from .ssm import (init_mamba2, init_rglru, mamba2_decode, mamba2_forward,
+                  rglru_decode, rglru_forward)
+
+BIG_POS = jnp.int32(1 << 30)
+
+
+# ---------------------------------------------------------------------------
+# sharding context
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Everything the forward pass needs to know about the mesh."""
+
+    mesh: Optional[Mesh] = None
+    rules: Mapping[str, Optional[str]] = dfield(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    batch_axes: tuple[str, ...] = ()        # activation batch sharding
+    decode_seq_axes: tuple[str, ...] = ()   # cache seq sharding (flash-decode)
+    residual_tp: bool = False               # shard residual d_model over TP
+                                            # (Megatron-style sequence par.:
+                                            # remat-saved carries 16x smaller)
+    moe_a2a: Optional[Any] = None           # explicit-EP MoE fn (make_moe_a2a)
+
+    @property
+    def tp(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape.get("model", 1)
+
+    @property
+    def ba(self):
+        return tuple(self.batch_axes) if self.batch_axes else None
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+def norm_apply(p, x, cfg: ModelConfig, prefix: str):
+    if f"{prefix}_b" in p:
+        return layer_norm(x, p[prefix], p[f"{prefix}_b"], eps=cfg.norm_eps)
+    return rms_norm(x, p[prefix], eps=cfg.norm_eps,
+                    plus_one=cfg.norm_plus_one)
+
+
+def init_norm(pt: ParamTree, cfg: ModelConfig, name: str, dim: int) -> None:
+    init = 0.0 if cfg.norm_plus_one else 1.0
+    pt.const(name, (dim,), ("embed",), init)
+    if cfg.norm_kind == "layernorm":
+        pt.const(f"{name}_b", (dim,), ("embed",), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+def init_attention(pt: ParamTree, cfg: ModelConfig, tp: int, *,
+                   cross: bool = False, name: str = "attn") -> None:
+    d, hd = cfg.d_model, cfg.head_dim
+    Hp = cfg.padded_heads(tp)
+    Kv = cfg.padded_kv_heads(tp)
+    sub = pt.child()
+    sub.dense("wq", (d, Hp, hd), ("embed", "q_heads", "head_dim"), fan_in=d)
+    sub.dense("wk", (d, Kv, hd), ("embed", "kv_heads", "head_dim"), fan_in=d)
+    sub.dense("wv", (d, Kv, hd), ("embed", "kv_heads", "head_dim"), fan_in=d)
+    sub.dense("wo", (Hp, hd, d), ("q_heads", "head_dim", "embed"),
+              fan_in=Hp * hd)
+    if Hp != cfg.n_heads:  # zero the padded heads: exact numerics
+        Gp = Hp // Kv
+        G = cfg.n_heads // cfg.n_kv_heads if cfg.n_kv_heads != cfg.n_heads \
+            else Hp  # MHA: tail padding within the single 'group'
+        if cfg.n_kv_heads == cfg.n_heads:
+            pad = jnp.arange(Hp) >= cfg.n_heads
+        else:  # pad heads sit at the tail of each kv group
+            pad = (jnp.arange(Hp) % Gp) >= G
+        sub.params["wq"] = jnp.where(pad[None, :, None], 0.0,
+                                     sub.params["wq"])
+        sub.params["wo"] = jnp.where(pad[:, None, None], 0.0,
+                                     sub.params["wo"])
+    if Kv != cfg.n_kv_heads:  # MHA padded kv heads: zero k/v projections
+        padkv = jnp.arange(Kv) >= cfg.n_kv_heads
+        sub.params["wk"] = jnp.where(padkv[None, :, None], 0.0,
+                                     sub.params["wk"])
+        sub.params["wv"] = jnp.where(padkv[None, :, None], 0.0,
+                                     sub.params["wv"])
+    if cfg.qkv_bias and not cross:
+        sub.const("bq", (Hp, hd), ("q_heads", "head_dim"), 0.0)
+        sub.const("bk", (Kv, hd), ("kv_heads", "head_dim"), 0.0)
+        sub.const("bv", (Kv, hd), ("kv_heads", "head_dim"), 0.0)
+    if cfg.qk_norm and not cross:
+        sub.const("q_norm", (hd,), ("head_dim",), 1.0)
+        sub.const("k_norm", (hd,), ("head_dim",), 1.0)
+    pt.sub(name, sub)
+
+
+def _project_qkv(p, x, cfg: ModelConfig, *, rope: Optional[tuple] = None):
+    """x (B, S, d) -> q (B,S,Hp,hd), k/v (B,S,Kv,hd)."""
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+    if rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin, mode=cfg.rope_mode)
+        k = apply_rope(k, cos, sin, mode=cfg.rope_mode)
+    return q, k, v
+
+
+def _rope_tables(cfg: ModelConfig, positions: jax.Array):
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    return rope_cos_sin(positions, rot, base=cfg.rope_base)
+
+
+def attention_forward(p, h, cfg: ModelConfig, ctx: ShardCtx, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      positions: Optional[jax.Array] = None,
+                      enc_out: Optional[jax.Array] = None,
+                      want_cache: bool = False):
+    """Full-sequence attention sub-block (no residual / norm — the layer
+    wrapper owns those).  ``enc_out`` switches to cross-attention."""
+    B, S, d = h.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    if enc_out is None:
+        rope = _rope_tables(cfg, positions)
+        q, k, v = _project_qkv(p, h, cfg, rope=rope)
+        kpos = positions
+    else:
+        cdt = h.dtype
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cdt))
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(cdt))
+        kpos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        causal, window = False, None
+    q = ctx.constrain(q, P(ctx.ba, None,
+                           ctx.rules.get("q_heads"), None))
+    out = attention(q, k, v, qpos=positions, kpos=kpos, causal=causal,
+                    window=window, impl=cfg.attn_impl,
+                    q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    if want_cache:
+        return o, (k, v)
+    return o
+
+
+def make_attn_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                    window: Optional[int], dtype, tp: int = 1) -> jax.Array:
+    S = min(window, max_seq) if window else max_seq
+    return kvc.kv_make(batch, S, cfg.padded_kv_heads(tp), cfg.head_dim,
+                       dtype, cfg.kv_layout, cfg.kv_order)
+
+
+def fill_attn_cache(storage, k, v, cfg: ModelConfig,
+                    window: Optional[int]) -> jax.Array:
+    """Write prefill k/v (B, S, Kv, hd) into a fresh cache."""
+    S = k.shape[1]
+    if window:
+        W = _cache_seq_len(storage, cfg)
+        if S >= W:
+            slot_pos = S - W + ((jnp.arange(W) - S) % W)
+            k = k[:, slot_pos]
+            v = v[:, slot_pos]
+        else:
+            pad = W - S
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return kvc.kv_write_prefill(storage, k, v, cfg.kv_layout, cfg.kv_order)
+
+
+def _cache_seq_len(storage, cfg: ModelConfig) -> int:
+    i = 1 if cfg.kv_order == "bsh" else 2
+    if cfg.kv_layout is not Layout.AOS:
+        i += 1
+    return storage.shape[i]
+
+
+def _ring_kpos(pos: jax.Array, W: int) -> jax.Array:
+    """Global position held by each ring slot after writing ``pos``;
+    unwritten slots get BIG_POS (masked by cache_len)."""
+    i = jnp.arange(W, dtype=jnp.int32)
+    p = pos - ((pos - i) % W)
+    return jnp.where(p >= 0, p, BIG_POS)
+
+
+def attention_decode(p, h_t, cache, pos, cfg: ModelConfig, ctx: ShardCtx, *,
+                     window: Optional[int] = None,
+                     cross_len: Optional[int] = None):
+    """One-token attention. h_t (B, d); cache = kv storage; pos = scalar
+    position of the incoming token.  cross_len: cache is a frozen encoder
+    cache of that length (no write, no rope, no mask beyond length)."""
+    B, d = h_t.shape
+    cdt = h_t.dtype
+    q = jnp.einsum("bd,dhk->bhk", h_t, p["wq"].astype(cdt))
+    if cross_len is None:
+        k_t = jnp.einsum("bd,dhk->bhk", h_t, p["wk"].astype(cdt))
+        v_t = jnp.einsum("bd,dhk->bhk", h_t, p["wv"].astype(cdt))
+        if "bq" in p:
+            q = q + p["bq"].astype(cdt)
+            k_t = k_t + p["bk"].astype(cdt)
+            v_t = v_t + p["bv"].astype(cdt)
+        if "q_norm" in p:
+            q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+            k_t = rms_norm(k_t, p["k_norm"], eps=cfg.norm_eps)
+        cos, sin = _rope_tables(cfg, pos[None].astype(jnp.int32))
+        q = apply_rope(q[:, None], cos[None], sin[None],
+                       mode=cfg.rope_mode)[:, 0]
+        k_t = apply_rope(k_t[:, None], cos[None], sin[None],
+                         mode=cfg.rope_mode)[:, 0]
+        if window:
+            W = _cache_seq_len(cache, cfg)
+            slot = (pos % W).astype(jnp.int32)
+            cache = kvc.kv_write_token(cache, k_t, v_t, slot, cfg.kv_layout,
+                                       cfg.kv_order)
+            kpos = jnp.broadcast_to(_ring_kpos(pos, W)[None], (B, W))
+        else:
+            cache = kvc.kv_write_token(cache, k_t, v_t, pos.astype(jnp.int32),
+                                       cfg.kv_layout, cfg.kv_order)
+            kpos = None
+        cache_len = jnp.broadcast_to(pos + 1, (B,)).astype(jnp.int32)
+    else:
+        cache_len = jnp.broadcast_to(cross_len, (B,)).astype(jnp.int32)
+        kpos = None
+
+    k, v = kvc.kv_read(cache, cfg.head_dim, cfg.kv_layout, cfg.kv_order)
+    fmt = "bshd" if cfg.kv_order == "bsh" else "bhsd"
+    use_dist = (ctx.mesh is not None and ctx.decode_seq_axes
+                and window is None)
+    if use_dist:
+        fn = make_sharded_decode_attention(
+            ctx.mesh, batch_axes=ctx.batch_axes,
+            seq_axes=ctx.decode_seq_axes,
+            heads_tp=ctx.tp > 1, kv_format=fmt)
+        out = fn(q, k, v, cache_len, window)
+    else:
+        from .attention import repeat_kv
+        h_ax = 2 if fmt == "bshd" else 1
+        k = jnp.repeat(k, q.shape[1] // k.shape[h_ax], axis=h_ax) \
+            if k.shape[h_ax] != q.shape[1] else k
+        v = jnp.repeat(v, q.shape[1] // v.shape[h_ax], axis=h_ax) \
+            if v.shape[h_ax] != q.shape[1] else v
+        out = decode_attention(q, k, v, cache_len,
+                               kpos=kpos, window=window, kv_format=fmt)
+    o = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(out.dtype))
+    return o, cache
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense MLP and MoE
+# ---------------------------------------------------------------------------
+
+def init_ffn(pt: ParamTree, cfg: ModelConfig, name: str = "ffn") -> None:
+    d, f = cfg.d_model, cfg.d_ff
+    sub = pt.child()
+    if cfg.n_experts:
+        init_moe(sub, d_model=d, d_ff=f, n_experts=cfg.n_experts, name="moe")
+        if cfg.dense_residual:
+            sub.dense("wi_dense", (d, 2, f), ("embed", None, "ff"), fan_in=d)
+            sub.dense("wo_dense", (f, d), ("ff", "embed"), fan_in=f)
+    elif cfg.mlp_kind in ("swiglu", "geglu"):
+        sub.dense("wi", (d, 2, f), ("embed", None, "ff"), fan_in=d)
+        sub.dense("wo", (f, d), ("ff", "embed"), fan_in=f)
+    else:
+        sub.dense("wi", (d, f), ("embed", "ff"), fan_in=d)
+        sub.const("bi", (f,), ("ff",), 0.0)
+        sub.dense("wo", (f, d), ("ff", "embed"), fan_in=f)
+        sub.const("bo", (d,), ("embed",), 0.0)
+    pt.sub(name, sub)
+
+
+def _act(cfg: ModelConfig, x):
+    return jax.nn.gelu(x) if cfg.act == "gelu" else jax.nn.silu(x)
+
+
+def _glu_act(cfg: ModelConfig, h):
+    gate = h[..., 0, :]
+    up = h[..., 1, :]
+    g = jax.nn.gelu(gate) if cfg.mlp_kind == "geglu" else jax.nn.silu(gate)
+    return g * up
+
+
+def ffn_forward(p, x, cfg: ModelConfig, ctx: ShardCtx, *,
+                dropless: bool = False):
+    """x (..., d) -> (out (..., d), aux_loss scalar)."""
+    cdt = x.dtype
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        lead = x.shape[:-1]
+        x2d = x.reshape(-1, cfg.d_model)
+        if ctx.moe_a2a is not None and not dropless:
+            out, aux = ctx.moe_a2a(p["moe"], x2d)
+        else:
+            out, aux = moe_block(p["moe"], x2d, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 dropless=dropless)
+        out = out.reshape(*lead, cfg.d_model)
+        if cfg.dense_residual:
+            h = jnp.einsum("...d,dtf->...tf", x, p["wi_dense"].astype(cdt))
+            out = out + _glu_act(cfg, h) @ p["wo_dense"].astype(cdt)
+        return out, aux
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        h = jnp.einsum("...d,dtf->...tf", x, p["wi"].astype(cdt))
+        return _glu_act(cfg, h) @ p["wo"].astype(cdt), aux
+    h = _act(cfg, x @ p["wi"].astype(cdt) + p["bi"].astype(cdt))
+    return h @ p["wo"].astype(cdt) + p["bo"].astype(cdt), aux
+
+
+# ---------------------------------------------------------------------------
+# uniform layer wrapper
+# ---------------------------------------------------------------------------
+
+def init_layer(pt: ParamTree, cfg: ModelConfig, kind: str, tp: int, *,
+               cross: bool = False, name: str = "layer") -> None:
+    """One decoder layer of the given kind (+optional cross-attention)."""
+    sub = pt.child()
+    init_norm(sub, cfg, "ln_mix", cfg.d_model)
+    if kind in ("A", "L"):
+        init_attention(sub, cfg, tp, name="attn")
+    elif kind == "M":
+        init_mamba2(sub, d_model=cfg.d_model, d_state=cfg.ssm_state,
+                    n_heads=cfg.padded_ssm_heads(tp),
+                    head_dim=cfg.ssm_head_dim, d_conv=cfg.d_conv,
+                    name="mamba",
+                    pad_heads=cfg.padded_ssm_heads(tp) - cfg.ssm_heads())
+    elif kind == "R":
+        init_rglru(sub, d_model=cfg.d_model, lru_width=cfg.lru_width,
+                   n_blocks=cfg.rnn_blocks, d_conv=cfg.d_conv, name="rglru")
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if cfg.sandwich_norm:
+        init_norm(sub, cfg, "ln_mix_post", cfg.d_model)
+    if cross:
+        init_norm(sub, cfg, "ln_cross", cfg.d_model)
+        init_attention(sub, cfg, tp, cross=True, name="cross")
+    if cfg.d_ff:
+        init_norm(sub, cfg, "ln_ffn", cfg.d_model)
+        init_ffn(sub, cfg, name="ffn")
+        if cfg.sandwich_norm:
+            init_norm(sub, cfg, "ln_ffn_post", cfg.d_model)
+    pt.sub(name, sub)
+
+
+def layer_forward(p, h, kind: str, cfg: ModelConfig, ctx: ShardCtx, *,
+                  causal: bool = True, positions=None, enc_out=None,
+                  want_cache: bool = False):
+    """Full-seq layer. Returns (h, aux_loss, cache_entry|None)."""
+    window = cfg.window if kind == "L" else None
+    if kind == "L" and cfg.rope_base_local is not None:
+        cfg = cfg.with_(rope_base=cfg.rope_base_local)
+    x = norm_apply(p, h, cfg, "ln_mix")
+    cache = None
+    if kind in ("A", "L"):
+        out = attention_forward(
+            p["attn"], x, cfg, ctx, causal=causal, window=window,
+            positions=positions, want_cache=want_cache)
+        if want_cache:
+            out, cache = out
+    elif kind == "M":
+        out, state = mamba2_forward(p["mamba"], x, chunk=cfg.ssd_chunk)
+        cache = state if want_cache else None
+    else:  # "R"
+        out, state = rglru_forward(p["rglru"], x)
+        cache = state if want_cache else None
+    if cfg.sandwich_norm:
+        out = norm_apply(p, out, cfg, "ln_mix_post")
+    h = h + out
+    if enc_out is not None and "cross" in p:
+        xc = norm_apply(p, h, cfg, "ln_cross")
+        h = h + attention_forward(p["cross"], xc, cfg, ctx, enc_out=enc_out)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff:
+        xf = norm_apply(p, h, cfg, "ln_ffn")
+        out, aux = ffn_forward(p["ffn"], xf, cfg, ctx)
+        if cfg.sandwich_norm:
+            out = norm_apply(p, out, cfg, "ln_ffn_post")
+        h = h + out
+    h = ctx.constrain(h, P(ctx.ba, None,
+                           "model" if ctx.residual_tp else None))
+    return h, aux, cache
+
+
+def layer_decode(p, h_t, kind: str, cfg: ModelConfig, ctx: ShardCtx, *,
+                 cache, pos, enc_cache=None, enc_len: Optional[int] = None):
+    """One-token layer step. Returns (h_t, new_cache)."""
+    window = cfg.window if kind == "L" else None
+    if kind == "L" and cfg.rope_base_local is not None:
+        cfg = cfg.with_(rope_base=cfg.rope_base_local)
+    x = norm_apply(p, h_t, cfg, "ln_mix")
+    if kind in ("A", "L"):
+        out, cache = attention_decode(p["attn"], x, cache, pos, cfg, ctx,
+                                      window=window)
+    elif kind == "M":
+        out, cache = mamba2_decode(p["mamba"], x, cache)
+    else:
+        out, cache = rglru_decode(p["rglru"], x, cache)
+    if cfg.sandwich_norm:
+        out = norm_apply(p, out, cfg, "ln_mix_post")
+    h_t = h_t + out
+    if enc_cache is not None and "cross" in p:
+        xc = norm_apply(p, h_t, cfg, "ln_cross")
+        out, _ = attention_decode(p["cross"], xc, enc_cache, pos, cfg, ctx,
+                                  cross_len=enc_len)
+        h_t = h_t + out
+    if cfg.d_ff:
+        xf = norm_apply(p, h_t, cfg, "ln_ffn")
+        out, _ = ffn_forward(p["ffn"], xf, cfg, ctx, dropless=True)
+        if cfg.sandwich_norm:
+            out = norm_apply(p, out, cfg, "ln_ffn_post")
+        h_t = h_t + out
+    return h_t, cache
+
+
+def make_layer_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int,
+                     dtype, tp: int = 1):
+    """Fresh (empty) cache entry for one layer."""
+    if kind == "A":
+        return make_attn_cache(cfg, batch, max_seq, None, dtype, tp)
+    if kind == "L":
+        return make_attn_cache(cfg, batch, max_seq, cfg.window, dtype, tp)
+    if kind == "M":
+        H = cfg.padded_ssm_heads(tp)
+        P_, N, K = cfg.ssm_head_dim, cfg.ssm_state, cfg.d_conv
+        return (jnp.zeros((batch, H, P_, N), jnp.float32),
+                jnp.zeros((batch, K - 1, H * P_ + 2 * N), dtype))
+    if kind == "R":
+        R, K = cfg.lru_width, cfg.d_conv
+        return (jnp.zeros((batch, R), jnp.float32),
+                jnp.zeros((batch, K - 1, R), dtype))
+    raise ValueError(kind)

@@ -1,0 +1,222 @@
+"""Mixture-of-Experts block: top-k routing with capacity-bucketed dispatch.
+
+TPU-native dispatch (DESIGN.md §5): tokens are sorted by expert id and
+scattered into a dense ``(E, C, d)`` buffer, expert FFNs run as one batched
+einsum over the expert axis (MXU-friendly, experts sharded over "model" =
+expert parallelism), and outputs are gathered back per (token, k) with the
+router weights.  Tokens beyond an expert's capacity are dropped (standard
+capacity-factor semantics); the router uses softmax-then-topk.
+
+This is the paper's C1 at the MoE level: the expert weights are a
+record-of-experts stacked on a leading axis (the SoA choice — one array,
+expert-major) rather than a Python list of per-expert params (AoS), which
+is what makes single-einsum compute and single-spec sharding possible.
+
+``arctic`` style adds a *dense residual* FFN in parallel with the routed
+experts (Snowflake Arctic's dense-MoE hybrid).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ParamTree
+
+
+def init_moe(pt: ParamTree, *, d_model: int, d_ff: int, n_experts: int,
+             name: str = "moe") -> None:
+    sub = pt.child()
+    sub.dense("router", (d_model, n_experts), ("embed", None),
+              fan_in=d_model)
+    sub.dense("wi", (n_experts, d_model, 2, d_ff),
+              ("experts", "embed", None, "expert_ff"), fan_in=d_model)
+    sub.dense("wo", (n_experts, d_ff, d_model),
+              ("experts", "expert_ff", "embed"), fan_in=d_ff)
+    pt.sub(name, sub)
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = int(capacity_factor * top_k * n_tokens / n_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to sublane multiple
+
+
+def _dispatch_slots(gate_idx: jax.Array, E: int, C: int):
+    """Sort (token, k) pairs by expert and bucket to capacity C.
+
+    Returns (slot (T*K,) int32 into a flat (E*C) buffer with E*C meaning
+    'dropped', keep mask, and the sort order)."""
+    TK = gate_idx.size
+    flat_e = gate_idx.reshape(-1)
+    order = jnp.argsort(flat_e)                                # stable
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    pos_in_e = jnp.arange(TK, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)
+    return slot, keep, order
+
+
+def moe_block(params, x2d: jax.Array, *, top_k: int = 2,
+              capacity_factor: float = 1.25, dropless: bool = False,
+              dtype=None) -> tuple[jax.Array, jax.Array]:
+    """x2d (T, d) -> (out (T, d), aux_loss ()).
+
+    ``dropless=True`` sizes every expert's bucket to T*top_k (zero drops,
+    exact routing) — used for decode steps where T = batch is small; the
+    capacity-factor path is the training/prefill form.
+
+    Returns the load-balancing auxiliary loss (Switch-style: E * sum_e
+    f_e * p_e with f = token fraction, p = mean router prob)."""
+    T, d = x2d.shape
+    E = params["router"].shape[-1]
+    C = T * top_k if dropless else moe_capacity(T, E, top_k, capacity_factor)
+    cdt = dtype or x2d.dtype
+
+    logits = (x2d.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_w, gate_idx = lax.top_k(probs, top_k)                 # (T, K)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    # -- aux loss ----------------------------------------------------------
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)   # (T, K, E)
+    ce = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)
+    aux = E * jnp.sum(me * ce) / top_k
+
+    # -- dispatch: sort (token, k) pairs by expert, bucket to capacity ------
+    slot, keep, order = _dispatch_slots(gate_idx, E, C)
+    src_tok = order // top_k                                   # token of pair
+
+    buf = jnp.zeros((E * C, d), cdt)
+    buf = buf.at[slot].set(x2d[src_tok].astype(cdt), mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    # -- expert compute (batched over the expert axis; E sharded -> EP) -----
+    wi = params["wi"].astype(cdt)                              # (E, d, 2, f)
+    wo = params["wo"].astype(cdt)                              # (E, f, d)
+    h = jnp.einsum("ecd,edtf->ectf", buf, wi)
+    h = jax.nn.silu(h[:, :, 0]) * h[:, :, 1]
+    eo = jnp.einsum("ecf,efd->ecd", h, wo).reshape(E * C, d)
+
+    # -- combine: gather each pair's slot output, weight, sum over k --------
+    pair_out = jnp.where(keep[:, None], eo.at[slot].get(mode="fill",
+                                                        fill_value=0.0), 0.0)
+    # un-sort back to (T, K) order
+    unsort = jnp.zeros_like(order).at[order].set(
+        jnp.arange(T * top_k, dtype=order.dtype))
+    pair_out = pair_out[unsort].reshape(T, top_k, d)
+    out = jnp.sum(pair_out * gate_w[..., None].astype(cdt), axis=1)
+    return out.astype(x2d.dtype), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GShard-style expert parallelism: explicit all-to-all under shard_map
+# ---------------------------------------------------------------------------
+
+def make_moe_a2a(mesh, *, dp_axes, top_k: int, capacity_factor: float,
+                 residual_tp: bool):
+    """Production MoE block: EP over the data axes, expert-TP (d_ff) over
+    "model", with the GShard all-to-all dispatch made explicit.
+
+    Layout (DESIGN.md §5):
+      wi (E, d, 2, f): E sharded over dp, f over model
+      wo (E, f, d):    E over dp,        f over model
+
+    Per data shard: local top-k -> local capacity buckets (E, C_l, d) ->
+    ``all_to_all`` over dp (split E, concat C) -> local expert GEMMs with
+    the model-sharded f (partial sums over f) -> reverse all_to_all ->
+    local combine to (T_l, d) partials -> ONE psum over "model"
+    (reduce-scattered onto the d_model-sharded residual when
+    ``residual_tp``, halving the payload — Megatron-style: the block's
+    only big collective is on token activations, not capacity buffers).
+
+    This is the paper's coarse-grained thesis in LM form: making the data
+    movement explicit in the program (instead of letting the partitioner
+    infer a gather) is what keeps the collective minimal.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in dp_axes if mesh.shape.get(a, 1) > 1)
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+    # all_to_all over one logical axis: use the innermost dp axis for the
+    # EP exchange; outer dp axes (pod) replicate experts (pure DP).
+    ep_axis = dp[-1] if dp else None
+    ep = mesh.shape[ep_axis] if ep_axis else 1
+
+    def fn(params, x2d):
+        T, d = x2d.shape
+        E = params["wi"].shape[0]
+
+        def local(router, wi, wo, x_l):
+            T_l = x_l.shape[0]
+            C_l = moe_capacity(T_l, E, top_k, capacity_factor)
+            logits = x_l.astype(jnp.float32) @ router.astype(jnp.float32)
+            probs = jax.nn.softmax(logits, axis=-1)
+            gate_w, gate_idx = lax.top_k(probs, top_k)
+            gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+            me = jnp.mean(probs, axis=0)
+            oh = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+            ce = jnp.mean(jnp.sum(oh, axis=1), axis=0)
+            aux = E * jnp.sum(me * ce) / top_k
+
+            slot, keep, order = _dispatch_slots(gate_idx, E, C_l)
+            src_tok = order // top_k
+            buf = jnp.zeros((E * C_l, d), x_l.dtype)
+            buf = buf.at[slot].set(x_l[src_tok], mode="drop")
+            buf = buf.reshape(E, C_l, d)
+
+            if ep_axis is not None:
+                # (E, C_l, d) -> (E/ep, C_l * ep, d): each rank keeps its
+                # own experts' tokens from every rank
+                buf = lax.all_to_all(buf, ep_axis, split_axis=0,
+                                     concat_axis=1, tiled=True)
+            h = jnp.einsum("ecd,edtf->ectf", buf, wi.astype(buf.dtype))
+            h = jax.nn.silu(h[:, :, 0]) * h[:, :, 1]
+            out = jnp.einsum("ecf,efd->ecd", h, wo.astype(h.dtype))
+            if ep_axis is not None:
+                out = lax.all_to_all(out, ep_axis, split_axis=1,
+                                     concat_axis=0, tiled=True)
+            out = out.reshape(E * C_l, d)
+            pair = jnp.where(keep[:, None],
+                             out.at[slot].get(mode="fill", fill_value=0.0),
+                             0.0)
+            unsort = jnp.zeros_like(order).at[order].set(
+                jnp.arange(order.size, dtype=order.dtype))
+            pair = pair[unsort].reshape(T_l, top_k, d)
+            y = jnp.sum(pair * gate_w[..., None].astype(pair.dtype), axis=1)
+            # the block's one big collective: partial over f-shards
+            if tp > 1:
+                if residual_tp:
+                    y = lax.psum_scatter(y, "model", scatter_dimension=1,
+                                         tiled=True)
+                else:
+                    y = lax.psum(y, "model")
+            for a in dp:
+                aux = lax.pmean(aux, a)
+            if tp > 1:
+                aux = lax.pmean(aux, "model")
+            return y, aux
+
+        out_d = P(dp if dp else None, "model" if (residual_tp and tp > 1)
+                  else None)
+        y, aux = jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(None, None),
+                      P(ep_axis, None, None, "model"),
+                      P(ep_axis, "model", None),
+                      P(dp if dp else None, None)),
+            out_specs=(out_d, P()),
+            check_vma=False,
+        )(params["router"], params["wi"], params["wo"], x2d)
+        return y, aux
+
+    return fn

@@ -1,0 +1,316 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD) and RG-LRU
+(RecurrentGemma), plus the sequence-parallel halo/carry utilities that map
+the paper's C3 (stencil padding) onto LM sequence sharding.
+
+Mamba2 follows arXiv:2405.21060 with n_groups=1: separate (TP-shardable)
+projections for z/x/B/C/dt instead of the fused in_proj, causal depthwise
+conv over the x/B/C streams, SSD computed in the chunked dual form
+(``repro.kernels.ssd`` holds the Pallas intra-chunk kernel; the model path
+uses the pure-jnp chunked form so dry-run FLOPs are roofline-visible), and
+a per-head gated RMSNorm (deviation from the fused-group norm of the
+reference implementation, noted in DESIGN.md — per-head keeps the norm
+local under head-sharded TP).
+
+RG-LRU follows the Griffin paper (arXiv:2402.19427): block-diagonal input
+and recurrence gates, a = exp(-c * softplus(Lambda) * r_t), recurrence
+h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t), computed with
+``lax.associative_scan`` (log-depth — the TPU-native choice; a sequential
+scan would serialize 4k steps).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import ParamTree
+from repro.kernels.ssd.ref import ssd_chunked, ssd_decode_step
+
+RG_LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (the paper's 1-d stencil, at LM scale)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, *, prefix: Optional[jax.Array] = None):
+    """x (B, S, C), w (C, K) depthwise causal conv.  ``prefix`` (B, K-1, C)
+    supplies the left halo (decode state / sequence-parallel halo from the
+    previous shard — repro.core.halo provides it under shard_map); zeros
+    otherwise."""
+    B, S, C = x.shape
+    K = w.shape[-1]
+    if prefix is None:
+        prefix = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)          # (B, S+K-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k : k + S].astype(jnp.float32) \
+            * w[:, k].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv_state_update(state: jax.Array, xt: jax.Array) -> jax.Array:
+    """Roll one token into the (B, K-1, C) conv state."""
+    return jnp.concatenate([state[:, 1:], xt[:, None]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(pt: ParamTree, *, d_model: int, d_state: int, n_heads: int,
+                head_dim: int, d_conv: int = 4, name: str = "mamba",
+                pad_heads: int = 0) -> None:
+    """n_heads includes TP padding (``pad_heads`` of them are zero-init so
+    padded head outputs vanish exactly)."""
+    H, P, N = n_heads, head_dim, d_state
+    sub = pt.child()
+    sub.dense("wz", (d_model, H, P), ("embed", "ssm_heads", None),
+              fan_in=d_model)
+    sub.dense("wx", (d_model, H, P), ("embed", "ssm_heads", None),
+              fan_in=d_model)
+    sub.dense("wB", (d_model, N), ("embed", "ssm_state"), fan_in=d_model)
+    sub.dense("wC", (d_model, N), ("embed", "ssm_state"), fan_in=d_model)
+    sub.dense("wdt", (d_model, H), ("embed", "ssm_heads"), fan_in=d_model)
+    # dt bias ~ softplus^-1 of dt in [1e-3, 1e-1]
+    sub.custom("dt_bias",
+               jnp.log(jnp.expm1(jnp.logspace(-3, -1, H))), ("ssm_heads",))
+    sub.custom("A_log", jnp.log(jnp.linspace(1.0, 16.0, H)), ("ssm_heads",))
+    sub.const("D", (H,), ("ssm_heads",), 1.0)
+    sub.dense("conv_x", (H * P, d_conv), (None, "conv"), fan_in=d_conv)
+    sub.dense("conv_B", (N, d_conv), ("ssm_state", "conv"), fan_in=d_conv)
+    sub.dense("conv_C", (N, d_conv), ("ssm_state", "conv"), fan_in=d_conv)
+    sub.const("norm", (H, P), ("ssm_heads", None), 1.0)
+    sub.dense("wo", (H, P, d_model), ("ssm_heads", None, "embed"),
+              fan_in=H * P)
+    if pad_heads:
+        for nm in ("wz", "wx", "wdt", "wo"):
+            w = sub.params[nm]
+            ax = 1 if nm != "wo" else 0
+            idx = [slice(None)] * w.ndim
+            idx[ax] = slice(H - pad_heads, None)
+            sub.params[nm] = w.at[tuple(idx)].set(0.0)
+    pt.sub(name, sub)
+
+
+def _gated_head_norm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                     eps: float = 1e-6) -> jax.Array:
+    """Per-head gated RMSNorm: norm(y * silu(z)) over the head_dim axis."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_forward(p, x: jax.Array, *, chunk: int = 128,
+                   init_state=None, conv_prefix=None):
+    """x (B, S, d) -> (y (B, S, d), (ssd_state, conv_state)).
+
+    conv_prefix, when given, is the (B, K-1, HP + 2N) halo for the three
+    convolved streams (decode / sequence-parallel)."""
+    B, S, d = x.shape
+    H, P = p["wz"].shape[1], p["wz"].shape[2]
+    N = p["wB"].shape[1]
+    K = p["conv_x"].shape[-1]
+
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"].astype(x.dtype))
+    xh = jnp.einsum("bsd,dhp->bshp", x, p["wx"].astype(x.dtype))
+    Bm = x @ p["wB"].astype(x.dtype)
+    C = x @ p["wC"].astype(x.dtype)
+    dt = x @ p["wdt"].astype(x.dtype)
+
+    streams = jnp.concatenate(
+        [xh.reshape(B, S, H * P), Bm, C], axis=-1)
+    wconv = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=0)
+    conv_out = jax.nn.silu(causal_conv1d(streams, wconv, prefix=conv_prefix))
+    new_conv_state = streams[:, -(K - 1):] if conv_prefix is None else \
+        jnp.concatenate([conv_prefix, streams], axis=1)[:, -(K - 1):]
+    xh = conv_out[..., : H * P].reshape(B, S, H, P)
+    Bm = conv_out[..., H * P : H * P + N]
+    C = conv_out[..., H * P + N :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    # pad seq to a chunk multiple; padded steps use dt = 0 (identity decay,
+    # zero state contribution) so the final state is exact
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, pad if i == 1 else 0)
+                                     for i in range(a.ndim)])
+        xh, Bm, C, dt = zpad(xh), zpad(Bm), zpad(C), zpad(dt)
+    y, state = ssd_chunked(xh, dt, A, Bm, C, D=p["D"].astype(jnp.float32),
+                           init_state=init_state, chunk=chunk)
+    if pad:
+        y = y[:, :S]
+    y = _gated_head_norm(y, z, p["norm"])
+    out = jnp.einsum("bshp,hpd->bsd", y, p["wo"].astype(y.dtype))
+    return out, (state, new_conv_state)
+
+
+def mamba2_decode(p, xt: jax.Array, state):
+    """One-token step. xt (B, d); state = (ssd_state (B,H,P,N),
+    conv_state (B, K-1, HP+2N))."""
+    ssd_state, conv_state = state
+    B, d = xt.shape
+    H, P = p["wz"].shape[1], p["wz"].shape[2]
+    N = p["wB"].shape[1]
+
+    z = jnp.einsum("bd,dhp->bhp", xt, p["wz"].astype(xt.dtype))
+    xh = jnp.einsum("bd,dhp->bhp", xt, p["wx"].astype(xt.dtype)).reshape(B, H * P)
+    Bm = xt @ p["wB"].astype(xt.dtype)
+    C = xt @ p["wC"].astype(xt.dtype)
+    dt = xt @ p["wdt"].astype(xt.dtype)
+
+    stream_t = jnp.concatenate([xh, Bm, C], axis=-1)
+    full = jnp.concatenate([conv_state, stream_t[:, None]], axis=1)  # (B,K,C)
+    wconv = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=0)
+    conv_t = jax.nn.silu(jnp.einsum("bkc,ck->bc", full.astype(jnp.float32),
+                                    wconv.astype(jnp.float32)))
+    new_conv_state = full[:, 1:]
+    xh = conv_t[:, : H * P].reshape(B, H, P).astype(xt.dtype)
+    Bm = conv_t[:, H * P : H * P + N].astype(xt.dtype)
+    C = conv_t[:, H * P + N :].astype(xt.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    new_ssd, yt = ssd_decode_step(ssd_state, xh, dt, A, Bm, C,
+                                  D=p["D"].astype(jnp.float32))
+    yt = _gated_head_norm(yt, z, p["norm"])
+    out = jnp.einsum("bhp,hpd->bd", yt, p["wo"].astype(yt.dtype))
+    return out, (new_ssd, new_conv_state)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru(pt: ParamTree, *, d_model: int, lru_width: int, n_blocks: int,
+               d_conv: int = 4, name: str = "rglru") -> None:
+    R, Hb = lru_width, n_blocks
+    W = R // Hb
+    sub = pt.child()
+    sub.dense("wx", (d_model, R), ("embed", "rnn"), fan_in=d_model)
+    sub.dense("wy", (d_model, R), ("embed", "rnn"), fan_in=d_model)
+    sub.dense("conv", (R, d_conv), ("rnn", "conv"), fan_in=d_conv)
+    sub.dense("gate_a", (Hb, W, W), ("rnn", None, None), fan_in=W)
+    sub.const("gate_a_b", (R,), ("rnn",), 0.0)
+    sub.dense("gate_x", (Hb, W, W), ("rnn", None, None), fan_in=W)
+    sub.const("gate_x_b", (R,), ("rnn",), 0.0)
+    # Lambda init so a = exp(-c softplus(L)) is in ~[0.9, 0.999]
+    a0 = jnp.linspace(0.9, 0.999, R)
+    lam = jnp.log(jnp.expm1(-jnp.log(a0) / RG_LRU_C))
+    sub.custom("lam", lam, ("rnn",))
+    sub.dense("wo", (R, d_model), ("rnn", "embed"), fan_in=R)
+    pt.sub(name, sub)
+
+
+def _block_diag(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (..., R) through block-diagonal weight (Hb, W, W) + bias (R,)."""
+    Hb, W, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], Hb, W)
+    out = jnp.einsum("...hw,hwv->...hv", xs, w.astype(x.dtype))
+    return out.reshape(*x.shape[:-1], Hb * W) + b.astype(x.dtype)
+
+
+def _rglru_gates(p, xc):
+    """log_a (f32) and gated input for the recurrence; xc (B,S,R)."""
+    r = jax.nn.sigmoid(_block_diag(xc, p["gate_a"], p["gate_a_b"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(xc, p["gate_x"], p["gate_x_b"])
+                       .astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xc.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_forward(p, x: jax.Array, *, init_state=None, conv_prefix=None):
+    """x (B, S, d) -> (y (B, S, d), (h_state (B,R), conv_state))."""
+    B, S, d = x.shape
+    R = p["wx"].shape[1]
+    K = p["conv"].shape[-1]
+
+    xb = x @ p["wx"].astype(x.dtype)
+    yb = jax.nn.gelu(x @ p["wy"].astype(x.dtype))
+    xc = causal_conv1d(xb, p["conv"], prefix=conv_prefix)
+    new_conv_state = xb[:, -(K - 1):] if conv_prefix is None else \
+        jnp.concatenate([conv_prefix, xb], axis=1)[:, -(K - 1):]
+
+    a, gated = _rglru_gates(p, xc)
+    if init_state is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones((B, 1, R), a.dtype), a], axis=1)
+        gated = jnp.concatenate([init_state.astype(jnp.float32)[:, None],
+                                 gated], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = lax.associative_scan(combine, (a, gated), axis=1)
+    if init_state is not None:
+        h = h[:, 1:]
+    h_last = h[:, -1]
+    out = (h.astype(x.dtype) * yb) @ p["wo"].astype(x.dtype)
+    return out, (h_last, new_conv_state)
+
+
+def rglru_decode(p, xt: jax.Array, state):
+    """One-token step; state = (h (B,R) f32, conv_state (B,K-1,R))."""
+    h, conv_state = state
+    B, d = xt.shape
+    xb = xt @ p["wx"].astype(xt.dtype)
+    yb = jax.nn.gelu(xt @ p["wy"].astype(xt.dtype))
+    full = jnp.concatenate([conv_state, xb[:, None]], axis=1)
+    xc = jnp.einsum("bkr,rk->br", full.astype(jnp.float32),
+                    p["conv"].astype(jnp.float32)).astype(xt.dtype)
+    a, gated = _rglru_gates(p, xc)
+    h_new = a * h.astype(jnp.float32) + gated
+    out = (h_new.astype(xt.dtype) * yb) @ p["wo"].astype(xt.dtype)
+    return out, (h_new, full[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel (context-parallel) utilities — paper C3 at LM scale
+# ---------------------------------------------------------------------------
+
+def seqpar_conv_halo(x_local: jax.Array, *, width: int, axis_name: str):
+    """Left halo of ``width`` tokens from the previous sequence shard via
+    ppermute — exactly repro.core.halo's one-sided exchange.  First shard
+    gets zeros (causal boundary).  Must run inside shard_map."""
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    send = x_local[:, -width:]
+    halo = lax.ppermute(send, axis_name, [(i, i + 1) for i in range(n - 1)])
+    return jnp.where(idx == 0, jnp.zeros_like(halo), halo)
+
+
+def seqpar_scan_carry(a_total: jax.Array, h_local: jax.Array, *,
+                      axis_name: str):
+    """Combine per-shard linear-recurrence results across sequence shards.
+
+    Each shard computed its local recurrence from a zero state, yielding
+    ``h_local`` (B, R) (its last state) and ``a_total`` (B, R) (the product
+    of its decay factors).  The true incoming state of shard i is the
+    prefix-combined state of shards < i — an exclusive associative scan
+    over the mesh axis, done here with an all-gather (shard count is small)."""
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    a_all = lax.all_gather(a_total, axis_name)   # (n, B, R)
+    h_all = lax.all_gather(h_local, axis_name)   # (n, B, R)
+
+    def step(carry, xs):
+        a_i, h_i = xs
+        return carry * a_i + h_i, carry
+
+    _, incoming = lax.scan(step, jnp.zeros_like(h_local), (a_all, h_all))
+    return incoming[idx]  # state entering this shard

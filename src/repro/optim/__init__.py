@@ -1,0 +1,14 @@
+"""Optimizers and distributed-optimization tricks."""
+
+from .optimizers import (AdamW, Adafactor, Optimizer, clip_by_global_norm,
+                         make_optimizer)
+from .schedules import cosine_schedule, linear_warmup
+from .compression import (ErrorFeedbackState, compressed_psum,
+                          dequantize_int8, quantize_int8)
+
+__all__ = [
+    "AdamW", "Adafactor", "Optimizer", "clip_by_global_norm",
+    "make_optimizer", "cosine_schedule", "linear_warmup",
+    "ErrorFeedbackState", "compressed_psum", "quantize_int8",
+    "dequantize_int8",
+]

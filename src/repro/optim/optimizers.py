@@ -1,0 +1,206 @@
+"""AdamW and Adafactor, pytree-native, with ZeRO-1 sharding of moments.
+
+Both optimizers are (init, update, state_pspecs) triples over arbitrary
+param pytrees.  ``state_pspecs`` derives the moment sharding: each moment
+inherits its param's TP spec *plus* the DP axes on the first dimension
+that divides — the auto-SPMD form of ZeRO-1 (the update reads grads
+reduce-scattered to the moment sharding and writes params back via
+all-gather, both inserted by the partitioner from the specs alone;
+DESIGN.md §5).
+
+Adafactor (factored second moment, no first moment) is the required
+optimizer for arctic-480b: full Adam moments for 477B params exceed
+16 GB/chip even sharded over all 256 chips (2 x 4 bytes x 477e9 / 256
+= 14.9 GB); the factored estimate is ~(rows+cols) floats per matrix.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Pytree = Any
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def zero1_pspec(param_pspec: P, shape: tuple[int, ...], mesh: Mesh,
+                dp_axes: tuple[str, ...]) -> P:
+    """Extend a param's PartitionSpec with DP axes on the first free,
+    divisible dim — optimizer state sharded over data parallelism."""
+    dp = tuple(a for a in dp_axes if a in mesh.shape and mesh.shape[a] > 1)
+    if not dp:
+        return param_pspec
+    n = math.prod(mesh.shape[a] for a in dp)
+    entries = list(param_pspec) + [None] * (len(shape) - len(param_pspec))
+    # a mesh axis may appear at most once in a spec: drop DP axes already
+    # used by the param itself (e.g. MoE experts sharded over "data")
+    used = {e for ent in entries if ent is not None
+            for e in (ent if isinstance(ent, tuple) else (ent,))}
+    if used & set(dp):
+        dp = tuple(a for a in dp if a not in used)
+        if not dp:
+            return param_pspec
+        n = math.prod(mesh.shape[a] for a in dp)
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % n == 0 and s > 0:
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            return P(*entries)
+    return P(*entries)  # nothing divisible: stay with the param spec
+
+
+def _truncate(pspec: P, ndim: int) -> P:
+    entries = list(pspec)[:ndim]
+    entries += [None] * (ndim - len(entries))
+    return P(*entries)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    # update(grads, state, params, step) -> (new_params, new_state)
+    update: Callable[[Pytree, Pytree, Pytree, jax.Array], tuple[Pytree, Pytree]]
+    # state_pspecs(param_shapes, param_pspecs, mesh, dp_axes, zero1) -> tree
+    state_pspecs: Callable[..., Pytree]
+
+
+def AdamW(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,  # noqa: N802
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          moment_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            step_ = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr_t * step_
+            return (newp.astype(p.dtype), m32.astype(moment_dtype),
+                    v32.astype(moment_dtype))
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, m, v, p) for g, m, v, p
+                in zip(flat_g, flat_m, flat_v, flat_p)]
+        newp = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        newm = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        newv = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        return newp, {"m": newm, "v": newv}
+
+    def state_pspecs(param_shapes, param_pspecs, mesh, dp_axes, zero1=True):
+        def one(shape_leaf, pspec):
+            ps = _truncate(pspec, len(shape_leaf.shape))
+            if zero1:
+                ps = zero1_pspec(ps, shape_leaf.shape, mesh, dp_axes)
+            return ps
+        tree = jax.tree.map(one, param_shapes, param_pspecs)
+        return {"m": tree, "v": tree}
+
+    return Optimizer(init, update, state_pspecs)
+
+
+def Adafactor(lr: Callable | float, *, eps: float = 1e-30,  # noqa: N802
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018), no first
+    moment: state per matrix = row + col accumulators."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-0.8)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr_t * (
+                u + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), ns
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        newp = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        news = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return newp, news
+
+    def state_pspecs(param_shapes, param_pspecs, mesh, dp_axes, zero1=True):
+        def one(shape_leaf, pspec):
+            shape = shape_leaf.shape
+            full = list(_truncate(pspec, len(shape)))
+            if _factored(shape):
+                vr = P(*full[:-1])
+                vc = P(*(full[:-2] + full[-1:]))
+                if zero1:
+                    vr = zero1_pspec(vr, shape[:-1], mesh, dp_axes)
+                    vc = zero1_pspec(vc, shape[:-2] + shape[-1:], mesh,
+                                     dp_axes)
+                return {"vr": vr, "vc": vc}
+            v = P(*full)
+            if zero1:
+                v = zero1_pspec(v, shape, mesh, dp_axes)
+            return {"v": v}
+        return jax.tree.map(one, param_shapes, param_pspecs)
+
+    return Optimizer(init, update, state_pspecs)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return AdamW(lr, **kw)
+    if name == "adafactor":
+        return Adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

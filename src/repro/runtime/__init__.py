@@ -1,0 +1,5 @@
+"""Fault-tolerant training runtime."""
+
+from .supervisor import StepStats, Supervisor, TransientError
+
+__all__ = ["Supervisor", "StepStats", "TransientError"]

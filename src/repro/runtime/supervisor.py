@@ -1,0 +1,143 @@
+"""Host-side supervisor: the dynamic-scheduling layer of this system.
+
+The paper's work-stealing scheduler solves *within-step* dynamic load
+balance on a single heterogeneous node.  Under SPMD/XLA the within-step
+schedule is static, so the dynamic layer moves up a level: across steps
+and across failures (DESIGN.md §2/C5).  The supervisor owns:
+
+* **checkpoint/restart** — periodic async checkpoints; on a step failure
+  the state is restored from the last checkpoint and the step replayed
+  (the data pipeline is a pure function of the step counter, so replay is
+  exact).
+* **retry with backoff** — transient errors (preemption, DCN flaps,
+  simulated via :class:`TransientError` in tests) retry up to
+  ``max_failures`` times; deterministic errors re-raise after
+  ``max_retries_per_step``.
+* **straggler detection** — per-step wall-time EMA + variance; steps
+  slower than ``mean + straggler_zscore * std`` are logged with their
+  step index.  On a real fleet this feeds the re-scheduling policy
+  (demote/evict the slow host); here it feeds metrics and tests.
+* **elastic re-mesh** — ``resize(new_mesh, state_shardings)`` device_puts
+  the live state onto a new mesh mid-run (fewer/more DP shards after a
+  failure), using the checkpoint store's reshard-on-load path when
+  topology changed too much for live transfer.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+
+
+class TransientError(RuntimeError):
+    """A retryable failure (preemption / link flap); tests raise this."""
+
+
+@dataclass
+class StepStats:
+    count: int = 0
+    mean: float = 0.0
+    m2: float = 0.0
+    last: float = 0.0
+    stragglers: list = field(default_factory=list)
+
+    def update(self, dt: float, step: int, zscore: float = 3.0) -> bool:
+        """Welford update; returns True if this step was a straggler."""
+        self.last = dt
+        self.count += 1
+        d = dt - self.mean
+        self.mean += d / self.count
+        self.m2 += d * (dt - self.mean)
+        if self.count >= 8:
+            std = math.sqrt(self.m2 / (self.count - 1))
+            if std > 0 and dt > self.mean + zscore * std:
+                self.stragglers.append((step, dt))
+                return True
+        return False
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self.m2 / max(self.count - 1, 1))
+
+
+@dataclass
+class Supervisor:
+    """Drives ``state = step_fn(state, batch)`` with fault tolerance."""
+
+    step_fn: Callable[[Any, Any], Any]
+    ckpt: CheckpointManager
+    ckpt_every: int = 50
+    max_failures: int = 10
+    max_retries_per_step: int = 3
+    straggler_zscore: float = 3.0
+    state_shardings: Any = None
+    log: Callable[[str], None] = print
+
+    stats: StepStats = field(default_factory=StepStats)
+    failures: int = 0
+
+    def run(self, state: Any, batch_at: Callable[[int], Any],
+            start_step: int, num_steps: int,
+            on_step: Optional[Callable[[int, Any], None]] = None) -> Any:
+        """Run steps [start_step, start_step + num_steps); returns state."""
+        step = start_step
+        end = start_step + num_steps
+        retries = 0
+        while step < end:
+            try:
+                t0 = time.perf_counter()
+                state = self.step_fn(state, batch_at(step))
+                jax.block_until_ready(jax.tree.leaves(state))
+                dt = time.perf_counter() - t0
+                if self.stats.update(dt, step, self.straggler_zscore):
+                    self.log(f"[supervisor] straggler step {step}: "
+                             f"{dt*1e3:.1f}ms (mean {self.stats.mean*1e3:.1f})")
+                retries = 0
+                step += 1
+                if on_step is not None:
+                    on_step(step, state)
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(step, state, extra={"step": step})
+            except TransientError as e:
+                self.failures += 1
+                retries += 1
+                if self.failures > self.max_failures:
+                    raise RuntimeError(
+                        f"exceeded max_failures={self.max_failures}") from e
+                if retries > self.max_retries_per_step:
+                    raise RuntimeError(
+                        f"step {step} failed {retries} times") from e
+                self.log(f"[supervisor] transient failure at step {step} "
+                         f"({e}); restoring last checkpoint")
+                state, step = self._restore(state, step)
+        self.ckpt.wait()
+        return state
+
+    def _restore(self, state, failed_step: int):
+        last = self.ckpt.latest_step()
+        if last is None:  # nothing saved yet: restart from given state
+            return state, failed_step
+        _, restored, extra = self.ckpt.restore_latest(
+            state, target_shardings=self.state_shardings)
+        self.log(f"[supervisor] resumed from checkpoint step {last}")
+        return restored, int(extra.get("step", last))
+
+    # -- elastic scaling ---------------------------------------------------
+    def resize(self, state: Any, new_shardings: Any) -> Any:
+        """Re-place live state onto a new mesh (elastic re-mesh).  Arrays
+        are pulled to host then device_put with the new shardings — the
+        slow-but-always-correct path; same-topology fast paths can use
+        jax.device_put directly on the live arrays."""
+        host = jax.device_get(state)
+        flat, treedef = jax.tree.flatten(host)
+        sh = treedef.flatten_up_to(new_shardings)
+        out = [jax.device_put(h, s) if s is not None else jax.device_put(h)
+               for h, s in zip(flat, sh)]
+        self.state_shardings = new_shardings
+        return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,31 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — unit/smoke tests must see
+the single real CPU device; multi-device behaviour is tested via
+subprocesses in test_distributed.py (jax locks device count on first use).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_subprocess_devices(code: str, n_devices: int = 8,
+                           timeout: int = 900) -> str:
+    """Run python code in a fresh process with N fake CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout

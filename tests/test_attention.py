@@ -1,0 +1,173 @@
+"""Model-level attention: chunked/tri vs dense, GQA replication, sliding
+windows, decode paths, ring caches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (_chunk_pairs, attention,
+                                    chunked_attention, decode_attention,
+                                    dense_attention, repeat_kv)
+
+
+def _qkv(rng, B, S, H, Hkv, D, scale=0.3):
+    q = jnp.asarray(rng.standard_normal((B, S, H, D), dtype=np.float32)) * scale
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D),
+                                        dtype=np.float32)) * scale
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D),
+                                        dtype=np.float32)) * scale
+    return q, k, v
+
+
+@pytest.mark.parametrize("impl", ["chunked", "tri"])
+@pytest.mark.parametrize("window", [None, 48])
+@pytest.mark.parametrize("hkv", [8, 4, 2])
+def test_chunked_matches_dense(rng, impl, window, hkv):
+    B, S, H, D = 2, 192, 8, 16
+    q, k, v = _qkv(rng, B, S, H, hkv, D)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ref = dense_attention(q, repeat_kv(k, H), repeat_kv(v, H),
+                          qpos=pos, kpos=pos, causal=True, window=window)
+    out = attention(q, k, v, qpos=pos, kpos=pos, causal=True, window=window,
+                    impl=impl, q_chunk=64, k_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_tri_pair_savings():
+    assert len(_chunk_pairs(8, 8, causal=True, window_chunks=None)) == 36
+    assert len(_chunk_pairs(8, 8, causal=True, window_chunks=2)) == 15
+    assert len(_chunk_pairs(4, 4, causal=False, window_chunks=None)) == 16
+
+
+def test_bidirectional_chunked(rng):
+    B, S, H, D = 1, 128, 4, 16
+    q, k, v = _qkv(rng, B, S, H, H, D)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ref = dense_attention(q, k, v, qpos=pos, kpos=pos, causal=False)
+    out = chunked_attention(q, k, v, qpos=pos, kpos=pos, causal=False,
+                            q_chunk=32, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_decode_matches_truncated_dense(rng):
+    B, S, H, Hkv, D = 3, 96, 8, 4, 16
+    kc = jnp.asarray(rng.standard_normal((B, S, Hkv, D),
+                                         dtype=np.float32)) * 0.3
+    vc = jnp.asarray(rng.standard_normal((B, S, Hkv, D),
+                                         dtype=np.float32)) * 0.3
+    qd = jnp.asarray(rng.standard_normal((B, H, D), dtype=np.float32)) * 0.3
+    lens = jnp.asarray([96, 50, 7], jnp.int32)
+    out = decode_attention(qd, kc, vc, lens)
+    for b in range(B):
+        L = int(lens[b])
+        r = dense_attention(qd[b:b + 1, None], kc[b:b + 1, :L],
+                            vc[b:b + 1, :L], qpos=jnp.asarray([L - 1]),
+                            kpos=jnp.arange(L), causal=False)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(r[0, 0]),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_decode_window(rng):
+    B, S, H, Hkv, D, W = 2, 64, 4, 2, 16, 16
+    kc = jnp.asarray(rng.standard_normal((B, S, Hkv, D),
+                                         dtype=np.float32)) * 0.3
+    vc = jnp.asarray(rng.standard_normal((B, S, Hkv, D),
+                                         dtype=np.float32)) * 0.3
+    qd = jnp.asarray(rng.standard_normal((B, H, D), dtype=np.float32)) * 0.3
+    lens = jnp.asarray([60, 33], jnp.int32)
+    out = decode_attention(qd, kc, vc, lens, window=W)
+    for b in range(B):
+        L = int(lens[b])
+        r = dense_attention(qd[b:b + 1, None], kc[b:b + 1, L - W:L],
+                            vc[b:b + 1, L - W:L], qpos=jnp.asarray([0]),
+                            kpos=jnp.arange(W), causal=False)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(r[0, 0]),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_ring_cache_decode_equivalence(rng):
+    """Local-attention ring cache: decoding with the W-slot ring must equal
+    decoding with the full (untruncated) cache + window mask."""
+    import repro.configs as C
+    from repro.models.blocks import (ShardCtx, attention_decode,
+                                     fill_attn_cache, init_layer,
+                                     make_attn_cache)
+    from repro.models.common import ParamTree
+
+    cfg = C.get_smoke("gemma3_12b")  # window 16
+    W = cfg.window
+    pt = ParamTree(jax.random.PRNGKey(0))
+    init_layer(pt, cfg, "L", 1, name="l")
+    p = pt.params["l"]["attn"]
+    B, S = 2, 40
+    ctx = ShardCtx()
+    # build ring cache from a prefill of S tokens, then decode 3 more
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model),
+                                        dtype=np.float32)) * 0.3
+    from repro.models.blocks import attention_forward
+    _, (k, v) = attention_forward(p, x, cfg, ctx, causal=True,
+                                  window=W, want_cache=True)
+    ring = make_attn_cache(cfg, B, S + 8, W, jnp.float32)
+    ring = fill_attn_cache(ring, k, v, cfg, W)
+    full = make_attn_cache(cfg, B, S + 8, None, jnp.float32)
+    full = fill_attn_cache(full, k, v, cfg, None)
+
+    h_t = jnp.asarray(rng.standard_normal((B, cfg.d_model),
+                                          dtype=np.float32)) * 0.3
+    for t in range(3):
+        pos = jnp.asarray(S + t)
+        o_ring, ring = attention_decode(p, h_t, ring, pos, cfg, ctx,
+                                        window=W)
+        ref, full = _windowed_ref(p, h_t, full, pos, cfg, W)
+        np.testing.assert_allclose(np.asarray(o_ring).astype(np.float32),
+                                   ref, rtol=2e-3, atol=2e-3)
+
+
+def _windowed_ref(p, h_t, full_cache, pos, cfg, W):
+    """Windowed decode against the FULL cache (explicit window mask) —
+    the oracle the W-slot ring buffer must reproduce."""
+    from repro.models import kvcache as kvc
+    from repro.models.common import rope_cos_sin, apply_rope, rms_norm
+    cdt = h_t.dtype
+    q = jnp.einsum("bd,dhk->bhk", h_t, p["wq"].astype(cdt))
+    k_t = jnp.einsum("bd,dhk->bhk", h_t, p["wk"].astype(cdt))
+    v_t = jnp.einsum("bd,dhk->bhk", h_t, p["wv"].astype(cdt))
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        k_t = rms_norm(k_t, p["k_norm"], eps=cfg.norm_eps)
+    cos, sin = rope_cos_sin(pos[None].astype(jnp.int32),
+                            int(cfg.head_dim * cfg.rope_fraction),
+                            base=cfg.rope_base)
+    q = apply_rope(q[:, None], cos[None], sin[None], mode=cfg.rope_mode)[:, 0]
+    k_t = apply_rope(k_t[:, None], cos[None], sin[None],
+                     mode=cfg.rope_mode)[:, 0]
+    cache = kvc.kv_write_token(full_cache, k_t, v_t, pos.astype(jnp.int32),
+                               cfg.kv_layout)
+    k, v = kvc.kv_read(cache, cfg.head_dim, cfg.kv_layout)
+    B = h_t.shape[0]
+    lens = jnp.broadcast_to(pos + 1, (B,)).astype(jnp.int32)
+    out = decode_attention(q, repeat_kv(k, q.shape[1]),
+                           repeat_kv(v, q.shape[1]), lens, window=W)
+    o = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(out.dtype))
+    return np.asarray(o, dtype=np.float32), cache
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([64, 96, 128]), qc=st.sampled_from([16, 32, 64]),
+       kc=st.sampled_from([16, 32]), seed=st.integers(0, 1000))
+def test_prop_chunk_size_invariance(s, qc, kc, seed):
+    """Attention output must not depend on chunking."""
+    rng = np.random.default_rng(seed)
+    B, H, D = 1, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, s, H, D), dtype=np.float32)) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, s, H, D), dtype=np.float32)) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, s, H, D), dtype=np.float32)) * 0.3
+    pos = jnp.arange(s, dtype=jnp.int32)
+    a = chunked_attention(q, k, v, qpos=pos, kpos=pos, q_chunk=qc, k_chunk=kc)
+    b = dense_attention(q, k, v, qpos=pos, kpos=pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4,
+                               atol=3e-5)

@@ -1,0 +1,176 @@
+"""Data pipeline, checkpoint store, and fault-tolerant supervisor."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.data import MemmapCorpus, Prefetcher, SyntheticLM
+from repro.runtime import Supervisor, TransientError
+
+
+# -- data -----------------------------------------------------------------------
+
+def test_synthetic_deterministic():
+    a = SyntheticLM(vocab_size=100, seq_len=8, global_batch=4)
+    b = SyntheticLM(vocab_size=100, seq_len=8, global_batch=4)
+    x, y = a.batch_at(7), b.batch_at(7)
+    np.testing.assert_array_equal(x["tokens"], y["tokens"])
+    assert (x["tokens"] != a.batch_at(8)["tokens"]).any()
+    # labels are next-token shifted
+    full_a = a.batch_at(3)
+    np.testing.assert_array_equal(full_a["labels"][:, :-1],
+                                  full_a["tokens"][:, 1:])
+
+
+def test_synthetic_shards_disjoint_and_cover():
+    full = SyntheticLM(vocab_size=50, seq_len=4, global_batch=8)
+    s0 = SyntheticLM(vocab_size=50, seq_len=4, global_batch=8,
+                     shard=0, num_shards=2)
+    s1 = SyntheticLM(vocab_size=50, seq_len=4, global_batch=8,
+                     shard=1, num_shards=2)
+    f = full.batch_at(5)["tokens"]
+    np.testing.assert_array_equal(np.concatenate(
+        [s0.batch_at(5)["tokens"], s1.batch_at(5)["tokens"]]), f)
+
+
+def test_memmap_corpus(tmp_path):
+    toks = np.arange(1000, dtype=np.uint16)
+    path = tmp_path / "corpus.bin"
+    toks.tofile(path)
+    c = MemmapCorpus(str(path), seq_len=10, global_batch=2)
+    b = c.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][0], np.arange(10))
+    np.testing.assert_array_equal(b["labels"][0], np.arange(1, 11))
+    b2 = c.batch_at(1)
+    assert (b2["tokens"] != b["tokens"]).any()
+
+
+def test_prefetcher():
+    src = SyntheticLM(vocab_size=100, seq_len=8, global_batch=2)
+    pf = Prefetcher(src, start_step=3, depth=2)
+    try:
+        s, batch = pf.next()
+        assert s == 3
+        np.testing.assert_array_equal(batch["tokens"],
+                                      src.batch_at(3)["tokens"])
+        s, _ = pf.next()
+        assert s == 4
+    finally:
+        pf.close()
+
+
+# -- checkpoint -------------------------------------------------------------------
+
+def _state(x=1.0):
+    return {"params": {"w": jnp.full((4, 4), x), "b": jnp.zeros(3)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 7, _state(2.5), extra={"step": 7})
+    step, restored, extra = load_checkpoint(d, _state(0.0))
+    assert step == 7 and extra["step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.full((4, 4), 2.5))
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=2)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, _state(float(s)))
+    mgr.wait()
+    steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+    assert steps == [30, 40]
+    step, restored, _ = mgr.restore_latest(_state(0.0))
+    assert step == 40
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.full((4, 4), 40.0))
+
+
+def test_checkpoint_atomic_tmp_ignored(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 5, _state(5.0))
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))  # simulated crash
+    mgr = CheckpointManager(d)
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, _state())
+    bad = {"params": {"w": jnp.zeros((2, 2)), "b": jnp.zeros(3)},
+           "step": jnp.zeros((), jnp.int32)}
+    with pytest.raises(ValueError):
+        load_checkpoint(d, bad)
+
+
+# -- supervisor --------------------------------------------------------------------
+
+def test_supervisor_runs_and_checkpoints(tmp_path):
+    calls = []
+
+    def step_fn(state, batch):
+        calls.append(batch)
+        return {"x": state["x"] + batch}
+
+    sup = Supervisor(step_fn=step_fn,
+                     ckpt=CheckpointManager(str(tmp_path / "ck")),
+                     ckpt_every=5, log=lambda *_: None)
+    state = sup.run({"x": jnp.zeros(())}, lambda i: jnp.asarray(1.0),
+                    start_step=0, num_steps=12)
+    assert float(state["x"]) == 12.0
+    assert sup.ckpt.latest_step() == 10
+
+
+def test_supervisor_recovers_from_transient_failure(tmp_path):
+    """Fail at step 7 twice; supervisor restores from the step-5 checkpoint
+    and replays — the final state must equal the failure-free run."""
+    fail_at = {"n": 2}
+
+    def step_fn(state, batch):
+        step = int(state["step"])
+        if step == 7 and fail_at["n"] > 0:
+            fail_at["n"] -= 1
+            raise TransientError("simulated preemption")
+        return {"x": state["x"] + batch, "step": state["step"] + 1}
+
+    sup = Supervisor(step_fn=step_fn,
+                     ckpt=CheckpointManager(str(tmp_path / "ck")),
+                     ckpt_every=5, log=lambda *_: None)
+    state = sup.run({"x": jnp.zeros(()), "step": jnp.asarray(0, jnp.int32)},
+                    lambda i: jnp.asarray(1.0), start_step=0, num_steps=12)
+    assert float(state["x"]) == 12.0
+    assert sup.failures == 2
+
+
+def test_supervisor_gives_up_on_persistent_failure(tmp_path):
+    def step_fn(state, batch):
+        raise TransientError("hard down")
+
+    sup = Supervisor(step_fn=step_fn,
+                     ckpt=CheckpointManager(str(tmp_path / "ck")),
+                     max_retries_per_step=2, log=lambda *_: None)
+    with pytest.raises(RuntimeError):
+        sup.run({"x": jnp.zeros(())}, lambda i: 1.0, 0, 5)
+
+
+def test_straggler_detection():
+    stats_holder = []
+
+    def step_fn(state, batch):
+        time.sleep(0.05 if batch else 0.001)
+        return state
+
+    sup = Supervisor(step_fn=step_fn, ckpt=CheckpointManager("/tmp/_ck_x"),
+                     ckpt_every=10**9, straggler_zscore=2.0,
+                     log=lambda *_: None)
+    sup.run({}, lambda i: i == 18, start_step=0, num_steps=20)
+    assert any(s == 18 for s, _ in sup.stats.stragglers), \
+        sup.stats.stragglers

@@ -1,0 +1,275 @@
+"""Multi-device behaviour (8 fake CPU devices via subprocess — jax locks
+the device count at first init, so these cannot run in the main pytest
+process; see conftest.run_subprocess_devices)."""
+
+import pytest
+
+from conftest import run_subprocess_devices
+
+
+@pytest.mark.slow
+def test_halo_exchange_multidevice():
+    run_subprocess_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (DistTensor, Graph, Executor, Boundary,
+                        concurrent_padded_access, make_mesh)
+mesh = make_mesh((4,), ("gx",))
+size = 64
+src = DistTensor("src", (size,), partition=("gx",), halo=(1,),
+                 boundary=Boundary.TRANSMISSIVE)
+dst = DistTensor("dst", (size,), partition=("gx",))
+for overlap in (False, True):
+    g = Graph()
+    g.split(lambda s, d: s[2:] - s[:-2], concurrent_padded_access(src), dst,
+            overlap=overlap)
+    ex = Executor(g, mesh=mesh)
+    x0 = jnp.arange(size, dtype=jnp.float32) ** 2
+    st = ex.init_state(src=x0)
+    st = ex(st)
+    xp = np.pad(np.arange(size, dtype=np.float64) ** 2, 1, mode="edge")
+    np.testing.assert_allclose(np.asarray(st["dst"]), xp[2:] - xp[:-2])
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_train_matches_unsharded():
+    run_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+import repro.configs as C
+from repro.launch.steps import make_train_step, input_specs, param_specs
+from repro.launch.mesh import make_mesh
+from repro.models.lm import init_lm
+from repro.models.config import ShapeCfg
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+for arch in ("qwen3_8b", "phi3_5_moe", "recurrentgemma_9b"):
+    cfg = C.get_smoke(arch)
+    step_fn, opt = make_train_step(cfg, mesh)
+    p_sds, _ = param_specs(cfg, mesh)
+    params = init_lm(cfg, jax.random.PRNGKey(0), tp=2)[0]
+    params = jax.tree.map(lambda x, s: jax.device_put(x, s.sharding),
+                          params, p_sds)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    shape = ShapeCfg("t", "train", 32, 8)
+    bspecs = input_specs(cfg, shape, mesh)
+    rng = np.random.default_rng(0)
+    batch = {}
+    for k, sd in bspecs.items():
+        arr = (rng.integers(0, cfg.vocab_size, sd.shape).astype(np.int32)
+               if k in ("tokens", "labels")
+               else rng.standard_normal(sd.shape).astype(np.float32))
+        batch[k] = jax.device_put(arr, sd.sharding)
+    _, m = jax.jit(step_fn)(state, batch)
+
+    step1, opt1 = make_train_step(cfg, None)
+    params1 = init_lm(cfg, jax.random.PRNGKey(0), tp=2)[0]
+    state1 = {"params": params1, "opt": opt1.init(params1),
+              "step": jnp.zeros((), jnp.int32)}
+    batch1 = {k: jnp.asarray(np.asarray(v)) for k, v in batch.items()}
+    _, m1 = jax.jit(step1)(state1, batch1)
+    d = abs(float(m["loss"]) - float(m1["loss"]))
+    assert d < 5e-3, (arch, d)
+    print(arch, "ok", d)
+print("OK")
+""", timeout=1800)
+
+
+@pytest.mark.slow
+def test_sharded_flash_decode_matches_local():
+    run_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.models.attention import decode_attention, make_sharded_decode_attention
+mesh = make_mesh((2, 4), ("data", "model"))
+B, S, H, Hkv, D = 4, 64, 8, 2, 16
+rng = np.random.default_rng(0)
+q = jnp.asarray(rng.standard_normal((B, H, D)).astype(np.float32)) * 0.3
+kc = jnp.asarray(rng.standard_normal((B, S, Hkv, D)).astype(np.float32)) * 0.3
+vc = jnp.asarray(rng.standard_normal((B, S, Hkv, D)).astype(np.float32)) * 0.3
+clen = jnp.asarray([50, 33, 64, 7], dtype=jnp.int32)
+fn = make_sharded_decode_attention(mesh, batch_axes=("data",),
+                                   seq_axes=("model",), heads_tp=True)
+out = jax.jit(fn)(
+    jax.device_put(q, NamedSharding(mesh, P("data", "model", None))),
+    jax.device_put(kc, NamedSharding(mesh, P("data", "model", None, None))),
+    jax.device_put(vc, NamedSharding(mesh, P("data", "model", None, None))),
+    jax.device_put(clen, NamedSharding(mesh, P("data"))))
+ref = decode_attention(q, kc, vc, clen)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                           rtol=2e-4, atol=2e-5)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_moe_a2a_matches_local_dispatch():
+    run_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.models.common import ParamTree
+from repro.models.moe import init_moe, make_moe_a2a, moe_block
+mesh = make_mesh((4, 2), ("data", "model"))
+E, d, f, T = 8, 16, 32, 64
+pt = ParamTree(jax.random.PRNGKey(0))
+init_moe(pt, d_model=d, d_ff=f, n_experts=E, name="moe")
+p = pt.params["moe"]
+x = jnp.asarray(np.random.default_rng(0).standard_normal((T, d))
+                .astype(np.float32)) * 0.5
+fn = make_moe_a2a(mesh, dp_axes=("data",), top_k=2, capacity_factor=8.0,
+                  residual_tp=False)
+ps = {"router": jax.device_put(p["router"], NamedSharding(mesh, P(None, None))),
+      "wi": jax.device_put(p["wi"], NamedSharding(mesh, P("data", None, None, "model"))),
+      "wo": jax.device_put(p["wo"], NamedSharding(mesh, P("data", "model", None)))}
+xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+out, aux = jax.jit(fn)(ps, xs)
+# generous capacity on both sides -> dropless -> exact match
+ref, aux_ref = moe_block(p, x, top_k=2, capacity_factor=8.0)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                           rtol=2e-3, atol=2e-4)
+# aux is the mean of per-shard estimates (GShard convention) — close to
+# but not identical with the global estimate
+assert abs(float(aux) - float(aux_ref)) < 0.25
+print("OK")
+""", timeout=1200)
+
+
+@pytest.mark.slow
+def test_compressed_psum_error_feedback():
+    run_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.optim.compression import ErrorFeedbackState, compressed_psum
+mesh = make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+gs = rng.standard_normal((8, 64)).astype(np.float32)
+true_mean = gs.mean(axis=0)
+
+def run_step(g_all, resid):
+    def f(g, r):
+        out, ef = compressed_psum({"g": g}, "data",
+                                  ef=ErrorFeedbackState({"g": r}))
+        return out["g"], ef.residual["g"]
+    return jax.jit(jax.shard_map(
+        f, mesh=mesh, in_specs=(P("data", None), P("data", None)),
+        out_specs=(P(None, None), P("data", None)), check_vma=False))(
+        g_all, resid)
+
+resid = jnp.zeros((8, 64), jnp.float32)
+total = np.zeros((1, 64), np.float32)
+n = 30
+for _ in range(n):
+    mean, resid = run_step(jnp.asarray(gs), resid)
+    total += np.asarray(mean)
+# error feedback: time-averaged compressed mean converges to true mean
+np.testing.assert_allclose(total[0] / n, true_mean, atol=2e-2)
+print("OK")
+""", timeout=1200)
+
+
+@pytest.mark.slow
+def test_seqpar_halo_and_carry():
+    run_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.models.ssm import seqpar_conv_halo, seqpar_scan_carry
+mesh = make_mesh((4,), ("sp",))
+B, S, C = 2, 32, 4
+x = jnp.asarray(np.random.default_rng(0).standard_normal((B, S, C))
+                .astype(np.float32))
+
+def f(x_l):
+    halo = seqpar_conv_halo(x_l, width=3, axis_name="sp")
+    return jnp.concatenate([halo, x_l], axis=1)
+
+out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(None, "sp", None),),
+              out_specs=P(None, "sp", None), check_vma=False))(x)
+# each shard's first 3 entries = previous shard's last 3 (zeros for shard 0)
+out = np.asarray(out).reshape(B, 4, 8 + 3, C)
+ref = np.asarray(x).reshape(B, 4, 8, C)
+np.testing.assert_allclose(out[:, 0, :3], 0.0)
+for i in range(1, 4):
+    np.testing.assert_allclose(out[:, i, :3], ref[:, i - 1, -3:])
+
+# linear recurrence carry: h_t = a h_{t-1} + b with constant a per shard
+a = jnp.asarray(np.random.default_rng(1).uniform(0.5, 0.9, (B, S, C))
+                .astype(np.float32))
+b = jnp.asarray(np.random.default_rng(2).standard_normal((B, S, C))
+                .astype(np.float32))
+
+def local_scan(a_l, b_l):
+    def step(h, inp):
+        ai, bi = inp
+        h = ai * h + bi
+        return h, h
+    h_last, _ = jax.lax.scan(step, jnp.zeros((B, C)),
+                             (jnp.moveaxis(a_l, 1, 0), jnp.moveaxis(b_l, 1, 0)))
+    return h_last
+
+def f2(a_l, b_l):
+    h_local = local_scan(a_l, b_l)
+    a_total = jnp.prod(a_l, axis=1)
+    incoming = seqpar_scan_carry(a_total, h_local, axis_name="sp")
+    # true last state of this shard given incoming carry
+    return (incoming * a_total + h_local)[:, None]
+
+out = jax.jit(jax.shard_map(f2, mesh=mesh,
+                            in_specs=(P(None, "sp", None),) * 2,
+                            out_specs=P(None, "sp", None),
+                            check_vma=False))(a, b)
+# reference: global sequential scan, take last state of each shard
+h = np.zeros((B, C), np.float32)
+refs = []
+for t in range(S):
+    h = np.asarray(a)[:, t] * h + np.asarray(b)[:, t]
+    if (t + 1) % 8 == 0:
+        refs.append(h.copy())
+ref = np.stack(refs, axis=1)  # (B, 4, C): last state of each shard
+np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+print("OK")
+""", timeout=1200)
+
+
+@pytest.mark.slow
+def test_fsdp_train_matches_unsharded():
+    run_subprocess_devices("""
+import numpy as np, jax, jax.numpy as jnp
+import repro.configs as C
+from repro.launch.steps import make_train_step, input_specs, param_specs
+from repro.launch.mesh import make_mesh
+from repro.models.lm import init_lm
+from repro.models.config import ShapeCfg
+
+mesh = make_mesh((2, 4), ("data", "model"))
+cfg = C.get_smoke("qwen3_8b").with_(train_sharding="fsdp")
+step_fn, opt = make_train_step(cfg, mesh)
+p_sds, _ = param_specs(cfg, mesh)
+params = init_lm(cfg, jax.random.PRNGKey(0), tp=1)[0]
+params = jax.tree.map(lambda x, s: jax.device_put(x, s.sharding),
+                      params, p_sds)
+state = {"params": params, "opt": opt.init(params),
+         "step": jnp.zeros((), jnp.int32)}
+shape = ShapeCfg("t", "train", 32, 8)
+bspecs = input_specs(cfg, shape, mesh)
+rng = np.random.default_rng(0)
+batch = {k: jax.device_put(
+    rng.integers(0, cfg.vocab_size, sd.shape).astype(np.int32), sd.sharding)
+    for k, sd in bspecs.items()}
+_, m = jax.jit(step_fn)(state, batch)
+
+cfg1 = cfg.with_(train_sharding="tp")
+step1, opt1 = make_train_step(cfg1, None)
+params1 = init_lm(cfg1, jax.random.PRNGKey(0), tp=1)[0]
+state1 = {"params": params1, "opt": opt1.init(params1),
+          "step": jnp.zeros((), jnp.int32)}
+batch1 = {k: jnp.asarray(np.asarray(v)) for k, v in batch.items()}
+_, m1 = jax.jit(step1)(state1, batch1)
+d = abs(float(m["loss"]) - float(m1["loss"]))
+assert d < 5e-3, d
+print("OK", d)
+""", timeout=1800)

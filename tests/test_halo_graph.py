@@ -1,0 +1,168 @@
+"""C3/C4: halo padding policies and the graph DAG builder/executor
+(single-device semantics; multi-device halos in test_distributed.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Boundary, DistTensor, Executor, Graph, MaxReducer,
+                        SumReducer, concurrent_padded_access, execute,
+                        exclusive_padded_access, make_reduction_result,
+                        pad_boundary_only, unpad)
+
+
+# -- halo fill policies -------------------------------------------------------
+
+def test_pad_transmissive():
+    x = jnp.asarray([1.0, 2.0, 3.0])
+    p = pad_boundary_only(x, axis=0, width=2, boundary=Boundary.TRANSMISSIVE)
+    np.testing.assert_array_equal(np.asarray(p), [1, 1, 1, 2, 3, 3, 3])
+
+
+def test_pad_linear():
+    x = jnp.asarray([1.0, 2.0, 3.0])
+    p = pad_boundary_only(x, axis=0, width=2, boundary=Boundary.LINEAR)
+    np.testing.assert_array_equal(np.asarray(p), [-1, 0, 1, 2, 3, 4, 5])
+
+
+def test_pad_periodic():
+    x = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    p = pad_boundary_only(x, axis=0, width=2, boundary=Boundary.PERIODIC)
+    np.testing.assert_array_equal(np.asarray(p), [3, 4, 1, 2, 3, 4, 1, 2])
+
+
+def test_pad_constant():
+    x = jnp.asarray([1.0, 2.0])
+    p = pad_boundary_only(x, axis=0, width=1, boundary=Boundary.CONSTANT,
+                          constant=9.0)
+    np.testing.assert_array_equal(np.asarray(p), [9, 1, 2, 9])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 16), w=st.integers(1, 3),
+       boundary=st.sampled_from(list(Boundary)))
+def test_prop_pad_unpad_roundtrip(n, w, boundary):
+    x = jnp.arange(float(n))
+    p = pad_boundary_only(x, axis=0, width=w, boundary=boundary)
+    assert p.shape[0] == n + 2 * w
+    np.testing.assert_array_equal(np.asarray(unpad(p, axis=0, width=w)),
+                                  np.asarray(x))
+
+
+# -- graph builder semantics ---------------------------------------------------
+
+def test_graph_levels_match_paper_listing5():
+    g = Graph()
+    g.emplace(lambda: None, lambda: None, lambda: None)  # A, B, C level 0
+    g.then(lambda: None)                                 # D? paper: then E
+    assert len(g.levels) == 2
+    assert len(g.levels[0]) == 3
+    assert len(g.levels[1]) == 1
+
+
+def test_graph_saxpy_split():
+    size = 64
+    x = DistTensor("x", (size,))
+    y = DistTensor("y", (size,))
+    g = Graph()
+    g.split(lambda a, xs, ys: a * xs + ys, 2.0, x, y)
+    state = execute(g, x=jnp.arange(size, dtype=jnp.float32),
+                    y=jnp.ones(size, jnp.float32))
+    np.testing.assert_allclose(np.asarray(state["y"]),
+                               2 * np.arange(size) + 1)
+
+
+def test_graph_reduce_paper_listing8():
+    size = 32
+    x = DistTensor("x", (size,))
+    res = make_reduction_result("total")
+    g = Graph()
+    g.split(lambda xs: jnp.ones_like(xs), x, writes=(0,))
+    g.then_reduce(x, res, SumReducer())
+    state = execute(g)
+    assert float(state["total"]) == size
+
+
+def test_graph_conditional_map_reduce_paper_listing9():
+    """Paper Listing 9: init to 4, subtract 1 until the sum hits 0."""
+    size = 16
+    x = DistTensor("x", (size,))
+    res = make_reduction_result("r")
+
+    init = Graph(name="init")
+    init.split(lambda xs: jnp.full_like(xs, 4.0), x, writes=(0,))
+
+    map_reduce = Graph(name="map_reduce")
+    map_reduce.split(lambda xs: xs - 1.0, x, writes=(0,))
+    map_reduce.then_reduce(x, res, SumReducer())
+    map_reduce.conditional(lambda state: state["r"] != 0.0)
+
+    g = Graph()
+    g.emplace(init)
+    g.then(map_reduce)
+    state = execute(g)
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.zeros(size))
+    assert float(state["r"]) == 0.0
+
+
+def test_graph_sync_and_host_node():
+    size = 8
+    x = DistTensor("x", (size,))
+    seen = []
+    g = Graph()
+    g.split(lambda xs: xs + 1.0, x, writes=(0,))
+    g.sync(lambda: seen.append("synced"))
+    g.then_split(lambda xs: xs * 2.0, x, writes=(0,))
+    state = execute(g)
+    assert seen == ["synced"]
+    np.testing.assert_array_equal(np.asarray(state["x"]),
+                                  np.full(size, 2.0))
+
+
+def test_graph_stencil_padded_access():
+    size = 16
+    src = DistTensor("src", (size,), halo=(1,),
+                     boundary=Boundary.TRANSMISSIVE)
+    dst = DistTensor("dst", (size,))
+    g = Graph()
+    g.split(lambda s, d: s[2:] - s[:-2], concurrent_padded_access(src), dst)
+    x0 = jnp.arange(size, dtype=jnp.float32) ** 2
+    state = execute(g, src=x0)
+    xp = np.pad(np.arange(size, dtype=np.float64) ** 2, 1, mode="edge")
+    np.testing.assert_allclose(np.asarray(state["dst"]), xp[2:] - xp[:-2])
+
+
+def test_graph_exclusive_padded_access_inplace():
+    size = 12
+    x = DistTensor("x", (size,), halo=(1,), boundary=Boundary.PERIODIC)
+    g = Graph()
+    g.split(lambda s: 0.5 * (s[2:] + s[:-2]), exclusive_padded_access(x),
+            writes=(0,))
+    x0 = jnp.arange(size, dtype=jnp.float32)
+    state = execute(g, x=x0)
+    xp = np.concatenate([[size - 1], np.arange(size), [0]]).astype(np.float64)
+    np.testing.assert_allclose(np.asarray(state["x"]),
+                               0.5 * (xp[2:] + xp[:-2]))
+
+
+def test_graph_run_steps_fori():
+    size = 8
+    x = DistTensor("x", (size,))
+    g = Graph()
+    g.split(lambda xs: xs + 1.0, x, writes=(0,))
+    ex = Executor(g)
+    state = ex.init_state()
+    state = ex.run(state, steps=10)
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.full(size, 10.0))
+
+
+def test_graph_tensor_name_conflict():
+    a = DistTensor("t", (8,))
+    b = DistTensor("t", (16,))
+    g = Graph()
+    g.split(lambda x: x, a, writes=(0,))
+    g.then_split(lambda x: x, b, writes=(0,))
+    with pytest.raises(ValueError):
+        g.all_tensors()

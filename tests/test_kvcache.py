@@ -1,0 +1,67 @@
+"""Polymorphic KV cache: layout x order matrix, write/read roundtrips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layout import Layout
+from repro.models import kvcache as kvc
+
+B, S, H, D = 2, 8, 3, 4
+
+
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+@pytest.mark.parametrize("order", ["bsh", "bhs"])
+def test_prefill_roundtrip(rng, layout, order):
+    k = jnp.asarray(rng.standard_normal((B, S, H, D), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, H, D), dtype=np.float32))
+    store = kvc.kv_make(B, S, H, D, jnp.float32, layout, order)
+    store = kvc.kv_write_prefill(store, k, v, layout, order)
+    k2, v2 = kvc.kv_read(store, D, layout, order)
+    if order == "bhs":
+        k2, v2 = jnp.swapaxes(k2, 1, 2), jnp.swapaxes(v2, 1, 2)
+    np.testing.assert_allclose(np.asarray(k2), np.asarray(k), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v), rtol=1e-6)
+
+
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+@pytest.mark.parametrize("order", ["bsh", "bhs"])
+def test_token_write(rng, layout, order):
+    store = kvc.kv_make(B, S, H, D, jnp.float32, layout, order)
+    k_t = jnp.asarray(rng.standard_normal((B, H, D), dtype=np.float32))
+    v_t = jnp.asarray(rng.standard_normal((B, H, D), dtype=np.float32))
+    store = kvc.kv_write_token(store, k_t, v_t, jnp.int32(5), layout, order)
+    k2, v2 = kvc.kv_read(store, D, layout, order)
+    if order == "bhs":
+        k2, v2 = jnp.swapaxes(k2, 1, 2), jnp.swapaxes(v2, 1, 2)
+    np.testing.assert_allclose(np.asarray(k2[:, 5]), np.asarray(k_t),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2[:, 5]), np.asarray(v_t),
+                               rtol=1e-6)
+    assert float(jnp.abs(k2[:, :5]).max()) == 0.0
+    assert float(jnp.abs(k2[:, 6:]).max()) == 0.0
+
+
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+@pytest.mark.parametrize("order", ["bsh", "bhs"])
+def test_pspec_rank_matches_storage(layout, order):
+    store = kvc.kv_make(B, S, H, D, jnp.float32, layout, order)
+    ps = kvc.kv_pspec(layout, batch_axes=("data",), seq_axes=("model",),
+                      order=order)
+    assert len(ps) == store.ndim
+    # the sequence axis must land on the actual S dim
+    seq_dim = [i for i, e in enumerate(ps)
+               if e == ("model",) or e == "model"]
+    assert len(seq_dim) == 1
+    assert store.shape[seq_dim[0]] == S
+
+
+def test_registry_aliases():
+    import repro.configs as C
+    assert C.get("qwen3-8b").name == "qwen3_8b"
+    assert C.get("phi3.5-moe-42b-a6.6b").name == "phi3_5_moe"
+    with pytest.raises(KeyError):
+        C.get("not-a-model")
+    for a in C.ARCH_IDS:
+        assert C.get(a).name == a

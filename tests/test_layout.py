@@ -1,0 +1,125 @@
+"""C1: polymorphic data layout — unit + hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Field, Layout, RecordArray, RecordSpec, Vector
+
+SPEC = RecordSpec.create("rho", "E", Vector("mom", 2))
+
+
+def _random_fields(rng, space):
+    return {"rho": jnp.asarray(rng.standard_normal(space, dtype=np.float32)),
+            "E": jnp.asarray(rng.standard_normal(space, dtype=np.float32)),
+            "mom": jnp.asarray(
+                rng.standard_normal((*space, 2), dtype=np.float32))}
+
+
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+def test_storage_shapes(layout):
+    space = (6, 5)
+    shape = RecordArray.storage_shape(SPEC, space, layout)
+    assert shape == ((6, 5, 4) if layout is Layout.AOS else (4, 6, 5))
+
+
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+def test_field_roundtrip(rng, layout):
+    space = (4, 3)
+    fields = _random_fields(rng, space)
+    rec = RecordArray.from_fields(SPEC, fields, layout)
+    assert rec.space == space
+    for name, v in fields.items():
+        np.testing.assert_array_equal(np.asarray(rec.field(name)),
+                                      np.asarray(v))
+
+
+def test_layout_interop_zero_cost_semantics(rng):
+    """with_layout must be a pure re-layout: every field identical."""
+    fields = _random_fields(rng, (7, 2))
+    a = RecordArray.from_fields(SPEC, fields, Layout.AOS)
+    s = a.with_layout(Layout.SOA)
+    back = s.with_layout(Layout.AOS)
+    np.testing.assert_array_equal(np.asarray(a.data), np.asarray(back.data))
+    for name in SPEC.names:
+        np.testing.assert_array_equal(np.asarray(a.field(name)),
+                                      np.asarray(s.field(name)))
+
+
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+def test_set_field(rng, layout):
+    rec = RecordArray.create(SPEC, (5, 4), layout)
+    v = jnp.asarray(rng.standard_normal((5, 4), dtype=np.float32))
+    rec2 = rec.set_field("E", v)
+    np.testing.assert_array_equal(np.asarray(rec2.field("E")), np.asarray(v))
+    np.testing.assert_array_equal(np.asarray(rec2.field("rho")),
+                                  np.zeros((5, 4), np.float32))
+
+
+def test_pytree_and_jit(rng):
+    rec = RecordArray.from_fields(SPEC, _random_fields(rng, (4, 4)),
+                                  Layout.SOA)
+
+    @jax.jit
+    def f(r: RecordArray) -> RecordArray:
+        return r.set_field("rho", r.field("rho") * 2.0)
+
+    out = f(rec)
+    assert isinstance(out, RecordArray)
+    np.testing.assert_allclose(np.asarray(out.field("rho")),
+                               2 * np.asarray(rec.field("rho")))
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        RecordSpec.create("a", "a")
+    with pytest.raises(ValueError):
+        Field("x", 0)
+    with pytest.raises(KeyError):
+        SPEC.offset("nope")
+
+
+# -- hypothesis properties ---------------------------------------------------
+
+field_names = st.lists(
+    st.text(alphabet="abcdefgh", min_size=1, max_size=4),
+    min_size=1, max_size=4, unique=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(names=field_names,
+       sizes=st.lists(st.integers(1, 3), min_size=4, max_size=4),
+       nx=st.integers(1, 6), ny=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_prop_layout_conversion_preserves_fields(names, sizes, nx, ny, seed):
+    spec = RecordSpec.create(*[(n, s) for n, s in zip(names, sizes)])
+    rng = np.random.default_rng(seed)
+    # documented convention: size-1 fields pass (*space), vectors (*space, k)
+    fields = {f.name: jnp.asarray(
+        rng.standard_normal((nx, ny, f.size) if f.size > 1 else (nx, ny),
+                            dtype=np.float32))
+        for f in spec.fields}
+    for lay in (Layout.AOS, Layout.SOA):
+        rec = RecordArray.from_fields(spec, fields, lay)
+        other = rec.with_layout(
+            Layout.SOA if lay is Layout.AOS else Layout.AOS)
+        for f in spec.fields:
+            a = np.asarray(rec.field(f.name))
+            b = np.asarray(other.field(f.name))
+            expect = np.asarray(fields[f.name])
+            np.testing.assert_array_equal(a, expect)
+            np.testing.assert_array_equal(b, expect)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5), seed=st.integers(0, 2**31 - 1),
+       layout=st.sampled_from([Layout.AOS, Layout.SOA]))
+def test_prop_set_then_get(n, seed, layout):
+    rng = np.random.default_rng(seed)
+    rec = RecordArray.create(SPEC, (n, n), layout)
+    v = jnp.asarray(rng.standard_normal((n, n, 2), dtype=np.float32))
+    rec = rec.set_field("mom", v)
+    np.testing.assert_array_equal(np.asarray(rec.field("mom")),
+                                  np.asarray(v))

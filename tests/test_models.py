@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (reduced same-family configs): one forward/train
+step on CPU asserting output shapes + no NaNs, plus prefill+decode ==
+full-sequence logits for every architecture."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.launch.steps import make_train_step
+from repro.models.blocks import ShardCtx
+from repro.models.lm import (decode_step, forward_loss, init_lm, param_count,
+                             prefill)
+
+CTX = ShardCtx()
+B, S = 2, 32
+
+
+def _batch(cfg, rng, with_labels=True):
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))}
+    if with_labels:
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    if cfg.is_encdec:
+        out["frames"] = jnp.asarray(rng.standard_normal(
+            (B, 16, cfg.frontend_dim)).astype(np.float32) * 0.1)
+    elif cfg.frontend_dim:
+        out["patches"] = jnp.asarray(rng.standard_normal(
+            (B, cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32)
+            * 0.1)
+    return out
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_smoke_forward(arch, rng):
+    cfg = C.get_smoke(arch)
+    params, specs = init_lm(cfg, jax.random.PRNGKey(0), tp=1)
+    assert param_count(cfg) > 0
+    loss, metrics = forward_loss(params, _batch(cfg, rng), cfg, CTX)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert np.isfinite(float(metrics["aux"]))
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_smoke_train_step(arch, rng):
+    cfg = C.get_smoke(arch)
+    step_fn, opt = make_train_step(cfg, None)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0), tp=1)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = _batch(cfg, rng)
+    jstep = jax.jit(step_fn)
+    losses = []
+    for _ in range(4):
+        state, m = jstep(state, batch)
+        assert np.isfinite(float(m["loss"]))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], f"{arch}: loss did not decrease {losses}"
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_prefill_decode_matches_full(arch, rng):
+    cfg = C.get_smoke(arch)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0), tp=1)
+    batch = _batch(cfg, rng, with_labels=False)
+    tokens = batch["tokens"]
+    kw = {"enc_len": 16} if cfg.is_encdec else {}
+    extra = cfg.frontend_tokens if (cfg.frontend_dim
+                                    and not cfg.is_encdec) else 0
+    logits_full, _ = prefill(params, batch, cfg, CTX)
+    bp = dict(batch)
+    bp["tokens"] = tokens[:, : S - 2]
+    _, caches = prefill(params, bp, cfg, CTX, max_seq=S + extra + 4)
+    lg, caches = decode_step(params, caches, tokens[:, S - 2], cfg, CTX, **kw)
+    lg, caches = decode_step(params, caches, tokens[:, S - 1], cfg, CTX, **kw)
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, : cfg.vocab_size]),
+        np.asarray(lg[:, : cfg.vocab_size]), rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_8b", "mamba2_130m"])
+def test_padded_vocab_masked(arch, rng):
+    """Logits beyond the true vocab must be -inf when padded."""
+    cfg = C.get_smoke(arch).with_(vocab_size=250)  # pad to 256 under tp 8
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0), tp=8)
+    batch = _batch(cfg, rng, with_labels=False)
+    logits, _ = prefill(params, batch, cfg, CTX)
+    assert logits.shape[-1] == 256
+    assert np.all(np.asarray(logits[:, 250:]) < -1e29)
+
+
+def test_full_configs_instantiable():
+    """The exact assigned configs must build (metadata only, no params)."""
+    for arch in C.ARCH_IDS:
+        cfg = C.get(arch)
+        n, pattern, tail = cfg.layer_groups()
+        assert n * len(pattern) + len(tail) == cfg.n_layers, arch
+        assert cfg.padded_heads(16) % 16 == 0, arch
+        if cfg.d_ff:
+            assert cfg.d_ff % 16 == 0, arch
+        assert cfg.padded_vocab(16) % 16 == 0, arch
+
+
+def test_param_counts_match_assignment():
+    """Full configs land near their nameplate sizes (no TP padding)."""
+    expect = {
+        "llava_next_mistral_7b": (6.5e9, 8.0e9),
+        "qwen1_5_4b": (3.0e9, 4.5e9),
+        "chatglm3_6b": (5.5e9, 7.0e9),
+        "qwen3_8b": (7.0e9, 9.0e9),
+        "gemma3_12b": (10e9, 13.5e9),
+        "mamba2_130m": (0.10e9, 0.16e9),
+        "arctic_480b": (430e9, 520e9),
+        "phi3_5_moe": (38e9, 46e9),
+        "recurrentgemma_9b": (8e9, 11e9),
+        "seamless_m4t_medium": (0.55e9, 1.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(C.get(arch), tp=1)
+        assert lo <= n <= hi, f"{arch}: {n:,} not in [{lo:.2e},{hi:.2e}]"
+
+
+@pytest.mark.parametrize("order", ["bsh", "bhs"])
+def test_kv_order_equivalence(order, rng):
+    """C1 space-order knob: both cache orders decode identically."""
+    cfg = C.get_smoke("gemma3_12b").with_(kv_order=order)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0), tp=1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))
+                       .astype(np.int32))
+    _, caches = prefill(params, {"tokens": toks[:, : S - 1]}, cfg, CTX,
+                        max_seq=S + 4)
+    lg, _ = decode_step(params, caches, toks[:, S - 1], cfg, CTX)
+    full, _ = prefill(params, {"tokens": toks}, cfg, CTX)
+    np.testing.assert_allclose(np.asarray(lg[:, : cfg.vocab_size]),
+                               np.asarray(full[:, : cfg.vocab_size]),
+                               rtol=3e-3, atol=3e-3)

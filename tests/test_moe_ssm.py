@@ -1,0 +1,182 @@
+"""MoE routing/dispatch and SSM (Mamba2 / RG-LRU) block tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import ParamTree
+from repro.models.moe import _dispatch_slots, init_moe, moe_block, moe_capacity
+from repro.models.ssm import (causal_conv1d, conv_state_update, init_mamba2,
+                              init_rglru, mamba2_decode, mamba2_forward,
+                              rglru_decode, rglru_forward)
+
+
+# -- MoE -----------------------------------------------------------------------
+
+def _moe_params(E=8, d=32, f=64):
+    pt = ParamTree(jax.random.PRNGKey(0))
+    init_moe(pt, d_model=d, d_ff=f, n_experts=E, name="moe")
+    return pt.params["moe"]
+
+
+def test_moe_dropless_matches_per_token_loop(rng):
+    p = _moe_params()
+    x = jnp.asarray(rng.standard_normal((48, 32), dtype=np.float32)) * 0.5
+    out, aux = moe_block(p, x, top_k=2, dropless=True)
+    probs = jax.nn.softmax(x @ p["router"], -1)
+    w, idx = jax.lax.top_k(probs, 2)
+    w = w / w.sum(-1, keepdims=True)
+    for t in range(0, 48, 7):
+        acc = 0
+        for j in range(2):
+            e = int(idx[t, j])
+            h = jnp.einsum("d,dtf->tf", x[t], p["wi"][e])
+            h = jax.nn.silu(h[0]) * h[1]
+            acc = acc + w[t, j] * (h @ p["wo"][e])
+        np.testing.assert_allclose(np.asarray(out[t]), np.asarray(acc),
+                                   rtol=2e-3, atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops():
+    """With capacity 8 and all tokens routed to one expert, outputs beyond
+    capacity must be exactly zero (dropped)."""
+    p = _moe_params(E=4)
+    # bias router so every token picks expert 0 then 1
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(0.0)
+    x = jnp.ones((64, 32), jnp.float32)
+    out, _ = moe_block(p, x, top_k=2, capacity_factor=0.25)
+    C = moe_capacity(64, 4, 2, 0.25)
+    assert C < 64
+    # identical tokens: first-C slots kept; others dropped -> zero rows exist
+    norms = np.linalg.norm(np.asarray(out), axis=-1)
+    assert (norms == 0).sum() > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(T=st.integers(4, 64), E=st.sampled_from([2, 4, 8]),
+       k=st.sampled_from([1, 2]), seed=st.integers(0, 10_000))
+def test_prop_dispatch_slots(T, E, k, seed):
+    """Dispatch invariants: kept slots unique, within capacity, and map to
+    the right expert bucket."""
+    rng = np.random.default_rng(seed)
+    gate_idx = jnp.asarray(rng.integers(0, E, (T, k)).astype(np.int32))
+    C = moe_capacity(T, E, k, 1.0)
+    slot, keep, order = _dispatch_slots(gate_idx, E, C)
+    slot, keep, order = map(np.asarray, (slot, keep, order))
+    kept = slot[keep]
+    assert len(np.unique(kept)) == len(kept)          # no collisions
+    assert (kept < E * C).all()
+    sorted_e = np.asarray(gate_idx).reshape(-1)[order]
+    np.testing.assert_array_equal(kept // C, sorted_e[keep])  # right bucket
+
+
+# -- Mamba2 ---------------------------------------------------------------------
+
+def _mamba_params(d=32, N=16, H=4, P=8):
+    pt = ParamTree(jax.random.PRNGKey(0))
+    init_mamba2(pt, d_model=d, d_state=N, n_heads=H, head_dim=P, name="m")
+    return pt.params["m"]
+
+
+def test_mamba2_forward_equals_decode(rng):
+    p = _mamba_params()
+    B, S, d = 2, 24, 32
+    x = jnp.asarray(rng.standard_normal((B, S, d), dtype=np.float32)) * 0.5
+    y_full, (st_f, conv_f) = mamba2_forward(p, x, chunk=8)
+    state = (jnp.zeros((B, 4, 8, 16)), jnp.zeros((B, 3, 4 * 8 + 2 * 16)))
+    ys = []
+    for t in range(S):
+        yt, state = mamba2_decode(p, x[:, t], state)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_f), np.asarray(state[0]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_mamba2_nondivisible_seq_padding(rng):
+    """S not divisible by chunk: padded path must equal naive decode."""
+    p = _mamba_params()
+    B, S, d = 1, 13, 32
+    x = jnp.asarray(rng.standard_normal((B, S, d), dtype=np.float32)) * 0.5
+    y, (st, _) = mamba2_forward(p, x, chunk=8)
+    state = (jnp.zeros((B, 4, 8, 16)), jnp.zeros((B, 3, 4 * 8 + 2 * 16)))
+    ys = []
+    for t in range(S):
+        yt, state = mamba2_decode(p, x[:, t], state)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(state[0]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_mamba2_padded_heads_exact(rng):
+    """Zero-init padded SSD heads must not change the output."""
+    B, S, d = 1, 16, 32
+    x = jnp.asarray(rng.standard_normal((B, S, d), dtype=np.float32)) * 0.5
+    pt = ParamTree(jax.random.PRNGKey(0))
+    init_mamba2(pt, d_model=d, d_state=16, n_heads=4, head_dim=8, name="m")
+    y_ref, _ = mamba2_forward(pt.params["m"], x, chunk=8)
+    pt2 = ParamTree(jax.random.PRNGKey(0))
+    init_mamba2(pt2, d_model=d, d_state=16, n_heads=6, head_dim=8,
+                pad_heads=2, name="m")
+    p2 = dict(pt2.params["m"])
+    # graft the unpadded weights into the first 4 head slots
+    for nm in ("wz", "wx", "wdt"):
+        p2[nm] = p2[nm].at[..., :4, :].set(pt.params["m"][nm]) \
+            if nm != "wdt" else p2[nm].at[..., :4].set(pt.params["m"][nm])
+    p2["wo"] = p2["wo"].at[:4].set(pt.params["m"]["wo"])
+    p2["dt_bias"] = p2["dt_bias"].at[:4].set(pt.params["m"]["dt_bias"])
+    p2["A_log"] = p2["A_log"].at[:4].set(pt.params["m"]["A_log"])
+    p2["D"] = p2["D"].at[:4].set(pt.params["m"]["D"])
+    p2["norm"] = p2["norm"].at[:4].set(pt.params["m"]["norm"])
+    p2["conv_x"] = p2["conv_x"].at[: 4 * 8].set(pt.params["m"]["conv_x"])
+    p2["conv_B"] = pt.params["m"]["conv_B"]
+    p2["conv_C"] = pt.params["m"]["conv_C"]
+    y_pad, _ = mamba2_forward(p2, x, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_causal_conv_matches_rolled(rng):
+    B, S, C, K = 2, 10, 6, 4
+    x = jnp.asarray(rng.standard_normal((B, S, C), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal((C, K), dtype=np.float32))
+    y = causal_conv1d(x, w)
+    xp = np.pad(np.asarray(x), ((0, 0), (K - 1, 0), (0, 0)))
+    ref = sum(xp[:, k : k + S] * np.asarray(w)[:, k] for k in range(K))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-6)
+
+
+# -- RG-LRU ---------------------------------------------------------------------
+
+def test_rglru_forward_equals_decode(rng):
+    pt = ParamTree(jax.random.PRNGKey(1))
+    init_rglru(pt, d_model=32, lru_width=32, n_blocks=4, name="r")
+    p = pt.params["r"]
+    B, S = 2, 20
+    x = jnp.asarray(rng.standard_normal((B, S, 32), dtype=np.float32)) * 0.5
+    y_full, (h_f, conv_f) = rglru_forward(p, x)
+    state = (jnp.zeros((B, 32)), jnp.zeros((B, 3, 32)))
+    ys = []
+    for t in range(S):
+        yt, state = rglru_decode(p, x[:, t], state)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-4)
+
+
+def test_rglru_decay_bounded(rng):
+    """RG-LRU states must stay bounded (|a| < 1 by construction)."""
+    pt = ParamTree(jax.random.PRNGKey(1))
+    init_rglru(pt, d_model=16, lru_width=16, n_blocks=2, name="r")
+    p = pt.params["r"]
+    x = jnp.asarray(rng.standard_normal((1, 512, 16), dtype=np.float32))
+    y, (h, _) = rglru_forward(p, x)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.abs(np.asarray(h)).max() < 1e3

@@ -1,0 +1,138 @@
+"""Optimizers, schedules, ZeRO-1 spec derivation, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import (AdamW, Adafactor, clip_by_global_norm,
+                         cosine_schedule, dequantize_int8, linear_warmup,
+                         quantize_int8)
+from repro.optim.optimizers import zero1_pspec
+
+
+def _quad_problem(opt, steps=200):
+    """min ||x - 3||^2 — any reasonable optimizer converges."""
+    params = {"x": jnp.zeros((4, 8))}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, i):
+        g = jax.grad(lambda p: jnp.sum((p["x"] - 3.0) ** 2))(params)
+        return opt.update(g, state, params, i)
+
+    for i in range(steps):
+        params, state = step(params, state, jnp.asarray(i))
+    return params
+
+
+def test_adamw_converges():
+    p = _quad_problem(AdamW(5e-2, weight_decay=0.0))
+    np.testing.assert_allclose(np.asarray(p["x"]), 3.0, atol=0.05)
+
+
+def test_adafactor_converges():
+    p = _quad_problem(Adafactor(5e-1), steps=400)
+    np.testing.assert_allclose(np.asarray(p["x"]), 3.0, atol=0.1)
+
+
+def test_adamw_matches_reference_step():
+    """One AdamW step against a hand-computed update."""
+    opt = AdamW(1e-1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0)
+    params = {"w": jnp.asarray([2.0])}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([0.5])}
+    newp, _ = opt.update(g, state, params, jnp.asarray(0))
+    m = 0.1 * 0.5 / (1 - 0.9)
+    v = 0.01 * 0.25 / (1 - 0.99)
+    expect = 2.0 - 0.1 * m / (np.sqrt(v) + 1e-8)
+    np.testing.assert_allclose(np.asarray(newp["w"]), [expect], rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gn), np.sqrt(90 + 160), rtol=1e-6)
+    total = np.sqrt(sum(float(jnp.sum(x ** 2))
+                        for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+
+
+def test_schedules():
+    s = cosine_schedule(1.0, 10, 100, floor=0.1)
+    assert float(s(0)) < 0.2
+    np.testing.assert_allclose(float(s(10)), 1.0, rtol=1e-3)
+    np.testing.assert_allclose(float(s(1000)), 0.1, rtol=1e-2)
+    w = linear_warmup(2.0, 4)
+    np.testing.assert_allclose(float(w(1)), 1.0)
+
+
+def test_zero1_pspec():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # data axis size 1 -> unchanged
+    assert zero1_pspec(P(None, "model"), (8, 4), mesh, ("data",)) \
+        == P(None, "model")
+
+
+def test_adamw_state_pspecs_structure():
+    opt = AdamW(1e-3)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    shapes = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    pspecs = {"w": P(None, "model")}
+    out = opt.state_pspecs(shapes, pspecs, mesh, ("data",), zero1=True)
+    assert set(out.keys()) == {"m", "v"}
+    assert out["m"]["w"] == P(None, "model")
+
+
+def test_adafactor_state_pspecs_structure():
+    opt = Adafactor(1e-3)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    shapes = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+              "b": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    pspecs = {"w": P("model", None), "b": P(None)}
+    out = opt.state_pspecs(shapes, pspecs, mesh, ("data",), zero1=True)
+    assert out["w"]["vr"] == P("model")
+    assert out["w"]["vc"] == P(None)
+    assert "v" in out["b"]
+
+
+# -- int8 compression -----------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-4, 1e3))
+def test_prop_quantize_bounded_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(128).astype(np.float32)) * scale
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) / 2 + 1e-6  # round-to-nearest bound
+
+
+def test_quantize_zero():
+    q, s = quantize_int8(jnp.zeros(16))
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, s)),
+                                  np.zeros(16))
+
+
+def test_error_feedback_accumulates_exactly():
+    """With a constant gradient, error feedback makes the AVERAGE of the
+    dequantized series converge to the true gradient."""
+    from repro.optim.compression import quantize_int8 as qz
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(64)
+                    .astype(np.float32))
+    resid = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        eff = g + resid
+        q, s = qz(eff)
+        g_hat = dequantize_int8(q, s)
+        resid = eff - g_hat
+        total = total + g_hat
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(g),
+                               atol=float(s) / 2 / n * 3 + 1e-5)

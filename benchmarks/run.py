@@ -15,8 +15,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from . import (fig13_scaling, table2_saxpy, table3_particle, table4_flux,
-                   table5_eikonal)
+                   table5_eikonal, table_layout)
     jobs = [
+        ("Layout table (AoS/SoA/AoSoA)", lambda: table_layout.main(
+            saxpy_n=1 << 18 if not args.full else 1 << 22,
+            particle_n=65_536 if not args.full else 1_048_576,
+            flux_shape=(128, 128) if not args.full else (1024, 1024))),
         ("Table 2 (SAXPY)", lambda: table2_saxpy.main(
             sizes=(1 << 18, 1 << 20) if not args.full
             else (1 << 20, 10 << 20, 100 << 20))),

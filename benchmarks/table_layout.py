@@ -1,0 +1,91 @@
+"""Paper Tables 2/3 layout axis — AoS vs SoA vs AoSoA per kernel.
+
+The paper's headline measurement: the SAME kernel body over the three
+storage layouts, so any timing delta is purely data movement.  Reported
+per kernel: median ms per layout, the AoS/SoA gap ratio, and the one-off
+relayout cost (what the executor's layout solver pays when it inserts a
+boundary conversion).
+
+CPU wall-clock is directional only (see common.py) — the structural
+result that transfers to TPU is the *ordering* and the relayout cost
+relative to one kernel invocation.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Boundary, Layout, RecordArray, pad_boundary_only, relayout
+from .common import Csv, time_fn
+
+LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
+
+
+def _bench_kernel(csv, kernel_name, n_label, make_rec, run):
+    base = make_rec(Layout.SOA)
+    ref = {k: np.asarray(v) for k, v in run(base).to_fields().items()}
+    times = {}
+    for lay in LAYOUTS:
+        rec = relayout(base, lay)
+        times[lay] = time_fn(run, rec)
+        got = run(rec).to_fields()
+        for name, want in ref.items():  # every field, incl. the written one
+            np.testing.assert_allclose(np.asarray(got[name]), want,
+                                       rtol=1e-4, atol=1e-5, err_msg=name)
+    t_relayout = time_fn(lambda r: relayout(r, Layout.AOS).data, base)
+    csv.row(kernel_name, n_label,
+            times[Layout.AOS], times[Layout.SOA], times[Layout.AOSOA],
+            times[Layout.AOS] / max(times[Layout.SOA], 1e-9), t_relayout)
+
+
+def main(saxpy_n=1 << 18, particle_n=65_536, flux_shape=(128, 128)) -> None:
+    csv = Csv("kernel", "size", "aos_ms", "soa_ms", "aosoa_ms",
+              "aos_over_soa", "relayout_ms")
+    rng = np.random.default_rng(0)
+
+    # -- saxpy (record form) -------------------------------------------------
+    from repro.kernels.saxpy.kernel import SAXPY_SPEC
+    from repro.kernels.saxpy.ops import saxpy_record
+
+    def make_saxpy(layout):
+        return RecordArray.from_fields(
+            SAXPY_SPEC,
+            {"x": jnp.asarray(rng.standard_normal(saxpy_n, dtype=np.float32)),
+             "y": jnp.asarray(rng.standard_normal(saxpy_n,
+                                                  dtype=np.float32))},
+            layout)
+
+    _bench_kernel(csv, "saxpy", saxpy_n, make_saxpy,
+                  lambda r: saxpy_record(r, 2.0))
+
+    # -- particle motion -----------------------------------------------------
+    from repro.kernels.particle.ops import PARTICLE_SPEC, particle_update
+
+    def make_particle(layout):
+        return RecordArray.from_fields(
+            PARTICLE_SPEC,
+            {"x": jnp.asarray(
+                rng.standard_normal((particle_n, 3), dtype=np.float32)),
+             "v": jnp.asarray(
+                 rng.standard_normal((particle_n, 3), dtype=np.float32))},
+            layout)
+
+    _bench_kernel(csv, "particle", particle_n, make_particle,
+                  lambda r: particle_update(r, 0.25))
+
+    # -- stencil (FORCE flux) ------------------------------------------------
+    from repro.kernels.stencil.ops import flux_difference
+    from repro.physics.euler import EULER_SPEC, shock_bubble_init
+
+    def make_flux(layout):
+        d = shock_bubble_init(*flux_shape)
+        for ax in (1, 2):
+            d = pad_boundary_only(d, axis=ax, width=1,
+                                  boundary=Boundary.TRANSMISSIVE)
+        return relayout(RecordArray(d, EULER_SPEC, Layout.SOA), layout)
+
+    _bench_kernel(csv, "flux", f"{flux_shape[0]}x{flux_shape[1]}", make_flux,
+                  lambda r: flux_difference(r, 0.1, 0.1))
+
+
+if __name__ == "__main__":
+    main()

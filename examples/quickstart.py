@@ -9,7 +9,7 @@ import numpy as np
 from repro.core import (Boundary, DistTensor, Executor, Graph, Layout,
                         RecordArray, RecordSpec, SumReducer, Vector,
                         concurrent_padded_access, execute,
-                        make_reduction_result)
+                        make_reduction_result, preferred_layout, relayout)
 
 # ---------------------------------------------------------------------------
 # 1. Polymorphic layout (paper Listing 2): one record type, two layouts
@@ -67,6 +67,35 @@ g = Graph()
 g.split(lambda s, d: s[2:] - s[:-2], concurrent_padded_access(src), dst)
 state = execute(g, src=jnp.arange(64.0) ** 2)
 print("central difference[1:4] =", np.asarray(state["dst"][1:4]))
+
+# ---------------------------------------------------------------------------
+# 5. Layout selection: user pin vs solver-chosen (paper §4.2)
+# ---------------------------------------------------------------------------
+# Three layouts now exist: AOS (*space, C), SOA (C, *space), and the tiled
+# AOSOA (*space[:-1], n_tiles, C, tile).  relayout() converts exactly.
+rec = RecordArray.from_fields(State, fields, Layout.SOA)
+print("AoSoA storage:", relayout(rec, Layout.AOSOA).data.shape)
+
+# (a) User pin: pin_layout=True forces the executor to keep your layout.
+p = DistTensor("p", (4, 256), spec=State, layout=Layout.AOS, pin_layout=True)
+g = Graph()
+g.split(lambda r: r.set_field("density", r.field("density") + 1.0), p,
+        writes=(0,))
+ex = Executor(g)
+print("pinned choice:", ex.plan.per_segment[0]["p"])       # Layout.AOS
+
+# (b) Solver-chosen: annotate a node with the kernel's preferred layout
+# (preferred_layout(...) or layout= on split/emplace) and the per-segment
+# layout solver honors it, inserting relayout nodes at jit-segment
+# boundaries when producer and consumer segments disagree.
+q = DistTensor("q", (4, 256), spec=State)                   # declared SOA
+g = Graph()
+g.split(lambda r: r.set_field("density", r.field("density") * 2.0),
+        preferred_layout(q, Layout.AOSOA), writes=(0,))
+ex = Executor(g)
+print("solver choice:", ex.plan.per_segment[0]["q"])        # Layout.AOSOA
+print("relayout steps:", ex.plan.relayouts)                 # [] (one segment)
+
 print("\nOn a mesh, DistTensor(partition=('data',)) shards the space and")
 print("the same graph runs SPMD with ppermute halo exchange - see")
 print("tests/test_distributed.py and examples/euler2d.py.")

@@ -1,5 +1,5 @@
 """Compiled-HLO analysis: loop-aware FLOPs / bytes / collective census."""
 
-from .hlo import HloCostModel, analyze_hlo
+from .hlo import HloCostModel, analyze_hlo, normalize_cost_analysis
 
-__all__ = ["HloCostModel", "analyze_hlo"]
+__all__ = ["HloCostModel", "analyze_hlo", "normalize_cost_analysis"]

@@ -479,5 +479,19 @@ class HloCostModel:
         }
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a per-device *list* of dicts (one per addressable
+    device); newer JAX returns the dict directly.  Always hand back a
+    dict (element 0 of a list — the numbers are identical across devices
+    for SPMD programs), and ``{}`` for None/empty."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
 def analyze_hlo(hlo_text: str) -> dict:
     return HloCostModel(hlo_text).summary()

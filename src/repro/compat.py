@@ -1,0 +1,137 @@
+"""Version-guarded JAX compatibility shims.
+
+The codebase is written against the modern JAX surface:
+
+* ``jax.make_mesh(shape, names, axis_types=...)``  (``axis_types`` and
+  ``jax.sharding.AxisType`` appeared after 0.4.x);
+* ``jax.shard_map(..., check_vma=...)``  (previously
+  ``jax.experimental.shard_map.shard_map(..., check_rep=...)``).
+
+On older installs this module provides equivalents and — because tests
+and user scripts also use the modern spellings directly — installs them
+onto the ``jax`` namespace when absent.  Every patch is additive and
+version-guarded: on a modern JAX this module is a no-op.
+
+``install()`` runs once on ``import repro``.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+__all__ = ["install", "make_mesh_auto", "make_mesh_compat",
+           "shard_map_compat"]
+
+
+class _AxisTypeShim(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (Auto/Explicit/Manual)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+_native_make_mesh = getattr(jax, "make_mesh", None)
+
+
+def _make_mesh_accepts_axis_types() -> bool:
+    if _native_make_mesh is None:
+        return False
+    try:
+        return "axis_types" in inspect.signature(
+            _native_make_mesh).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def make_mesh_compat(shape, axis_names, *, axis_types=None, **kw):
+    """``jax.make_mesh`` that tolerates installs without ``axis_types`` —
+    or without ``jax.make_mesh`` at all (falls back to a device-grid
+    ``Mesh``)."""
+    shape = tuple(shape)
+    axis_names = tuple(axis_names)
+    if _native_make_mesh is None:
+        import numpy as np
+
+        n = int(np.prod(shape)) if shape else 1
+        devices = np.asarray(jax.devices()[:n]).reshape(shape)
+        return jax.sharding.Mesh(devices, axis_names)
+    if axis_types is not None and _make_mesh_accepts_axis_types():
+        return _native_make_mesh(shape, axis_names, axis_types=axis_types,
+                                 **kw)
+    return _native_make_mesh(shape, axis_names, **kw)
+
+
+def make_mesh_auto(shape, axis_names):
+    """Mesh with Auto axis types where the install supports them — the
+    single version-guard used by ``repro.core.executor.make_mesh`` and
+    ``repro.launch.mesh``."""
+    shape, axis_names = tuple(shape), tuple(axis_names)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    axis_types = (None if axis_type is None
+                  else (axis_type.Auto,) * len(axis_names))
+    return make_mesh_compat(shape, axis_names, axis_types=axis_types)
+
+
+def _wrap_legacy_shard_map(fn):
+    params = inspect.signature(fn).parameters
+
+    def shard_map(f=None, /, **kw):
+        # check_vma -> check_rep is the one known-safe rename; any other
+        # kwarg the legacy signature lacks must fail loudly, not silently
+        # change program semantics
+        if "check_vma" in kw and "check_vma" not in params:
+            kw["check_rep"] = kw.pop("check_vma")
+        unknown = [k for k in kw if k not in params]
+        if unknown:
+            raise TypeError(
+                f"shard_map compat shim: kwargs {unknown} are not "
+                f"supported by the installed JAX's shard_map")
+        if f is None:
+            return lambda g: shard_map(g, **kw)
+        return fn(f, **kw)
+
+    return shard_map
+
+
+# captured before install() can patch the namespace, so repeated calls
+# never re-wrap an already-shimmed function
+_native_shard_map = getattr(jax, "shard_map", None)
+_shard_map_cache = None
+
+
+def shard_map_compat():
+    """Return a ``shard_map`` callable accepting the modern kwarg set
+    (idempotent: always derived from the pre-patch native function)."""
+    global _shard_map_cache
+    if _shard_map_cache is not None:
+        return _shard_map_cache
+    fn = _native_shard_map
+    if fn is not None and "check_vma" in inspect.signature(fn).parameters:
+        _shard_map_cache = fn
+        return fn
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    _shard_map_cache = _wrap_legacy_shard_map(fn)
+    return _shard_map_cache
+
+
+_installed = False
+
+
+def install() -> None:
+    """Idempotently patch missing modern APIs onto ``jax``."""
+    global _installed
+    if _installed:
+        return
+    _installed = True
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisTypeShim
+    if not _make_mesh_accepts_axis_types():
+        jax.make_mesh = make_mesh_compat
+    if _native_shard_map is None or "check_vma" not in inspect.signature(
+            _native_shard_map).parameters:
+        jax.shard_map = shard_map_compat()

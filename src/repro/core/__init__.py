@@ -2,13 +2,18 @@
 graph DAG + executor (the paper's C1-C6, see DESIGN.md)."""
 
 from .layout import (
+    AOSOA_LANE,
     Field,
     Layout,
     RecordArray,
     RecordRef,
     RecordSpec,
     Vector,
+    aosoa_tile,
     block_spec_for,
+    dispatch_with_relayout,
+    record_grid_1d,
+    relayout,
 )
 from .halo import Boundary, exchange, halo_blocks, interior, pad_boundary_only, unpad
 from .tensor import DistTensor, ReductionResult, make_reduction_result
@@ -27,12 +32,21 @@ from .graph import (
     exclusive_padded_access,
     exclusive_padded_access_in_shared,
     in_shared,
+    preferred_layout,
 )
-from .executor import Executor, execute, make_mesh
+from .executor import (
+    Executor,
+    LayoutPlan,
+    RelayoutStep,
+    execute,
+    make_mesh,
+    solve_layouts,
+)
 
 __all__ = [
-    "Field", "Layout", "RecordArray", "RecordRef", "RecordSpec", "Vector",
-    "block_spec_for",
+    "AOSOA_LANE", "Field", "Layout", "RecordArray", "RecordRef", "RecordSpec",
+    "Vector", "aosoa_tile", "block_spec_for", "dispatch_with_relayout",
+    "record_grid_1d", "relayout",
     "Boundary", "exchange", "halo_blocks", "interior", "pad_boundary_only",
     "unpad",
     "DistTensor", "ReductionResult", "make_reduction_result",
@@ -40,6 +54,7 @@ __all__ = [
     "Node", "Reducer", "SumReducer", "TensorArg",
     "concurrent_padded_access", "concurrent_padded_access_in_shared",
     "exclusive_padded_access", "exclusive_padded_access_in_shared",
-    "in_shared",
-    "Executor", "execute", "make_mesh",
+    "in_shared", "preferred_layout",
+    "Executor", "LayoutPlan", "RelayoutStep", "execute", "make_mesh",
+    "solve_layouts",
 ]

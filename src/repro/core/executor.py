@@ -19,12 +19,27 @@ decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
 * a graph with ``conditional`` becomes a ``lax.while_loop`` (device) or a
   host do/while (if it contains host nodes);
 * state buffers are donated to each segment (the paper's allocator-reuse,
-  C6): steps update state in place.
+  C6): steps update state in place;
+* a **layout solver** (paper §4.2's polymorphic layout made a compiler
+  decision) assigns each record tensor a storage layout *per jit segment*:
+  a user pin (``DistTensor.pin_layout``) is always honored, a node-level
+  preference (``preferred_layout`` / ``layout=`` on graph methods) is
+  honored next, padded (halo) access clamps AoSoA back to a per-axis
+  layout, and otherwise the declared layout stands.  Where the producing
+  and consuming segments disagree, the executor inserts an explicit
+  relayout step at the segment boundary (``LayoutPlan.relayouts`` lists
+  them for introspection).  Outside a call, every state dict is kept in
+  the plan's *initial* layouts (the trailing conversions are undone on
+  exit), so state dicts are interchangeable between calls and re-inits.
+  Device-only graphs always collapse into a single jit segment, so the
+  layout choice is naturally uniform there — layout changes never happen
+  inside a jitted loop body.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from contextlib import contextmanager
+from dataclasses import dataclass, field as dfield
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -33,21 +48,27 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map_compat
 from . import halo as halo_lib
-from .graph import AccessMode, ExecutionKind, Graph, Node
-from .layout import RecordArray
+from .graph import AccessMode, ExecutionKind, Graph, Node, TensorArg
+from .layout import Layout, RecordArray, relayout
 from .tensor import DistTensor, ReductionResult
 
-__all__ = ["Executor", "execute", "make_mesh"]
+__all__ = ["Executor", "execute", "make_mesh", "LayoutPlan", "RelayoutStep",
+           "solve_layouts"]
+
+# version-guarded shard_map accepting the modern kwarg set — bound here so
+# the executor does not depend on repro/__init__'s global jax monkeypatch
+shard_map = shard_map_compat()
 
 
 def make_mesh(shape, axis_names) -> Mesh:
-    """make_mesh with JAX<->0.9 compatible Auto axis types."""
-    return jax.make_mesh(
-        tuple(shape),
-        tuple(axis_names),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)),
-    )
+    """make_mesh with Auto axis types, version-guarded: older JAX installs
+    have neither ``jax.sharding.AxisType`` nor the ``axis_types`` kwarg
+    (the single guard implementation lives in ``repro.compat``)."""
+    from ..compat import make_mesh_auto
+
+    return make_mesh_auto(shape, axis_names)
 
 
 @dataclass
@@ -90,39 +111,277 @@ def _slice(x, axis, start, size):
     return x[tuple(idx)]
 
 
+# -- layout solver (paper §4.2 as a per-segment compiler pass) -----------------
+
+@dataclass(frozen=True)
+class RelayoutStep:
+    """An explicit layout conversion the executor inserts at a segment
+    boundary: ``tensor`` is converted ``src -> dst`` before ``segment``."""
+
+    segment: int
+    tensor: str
+    src: Layout
+    dst: Layout
+
+
+@dataclass
+class LayoutPlan:
+    """Solver output: one layout choice per record tensor per segment.
+
+    ``initial`` is what :meth:`Executor.init_state` materializes (the first
+    consuming segment's choice, so the common case needs zero relayouts);
+    ``relayouts`` are the boundary conversions of one sequential pass."""
+
+    per_segment: list[dict[str, Layout]] = dfield(default_factory=list)
+    initial: dict[str, Layout] = dfield(default_factory=dict)
+    relayouts: list[RelayoutStep] = dfield(default_factory=list)
+
+
+def _segment_nodes(kind: str, payload):
+    """All nodes a segment executes (loop bodies recursively)."""
+    if kind == "device":
+        for level in payload:
+            yield from level
+    elif kind in ("loop", "host_loop"):
+        yield from _graph_nodes(payload)
+    elif kind == "host":
+        yield payload
+
+
+def _graph_nodes(g: Graph):
+    for node in g.nodes():
+        if node.subgraph is not None:
+            yield from _graph_nodes(node.subgraph)
+        else:
+            yield node
+
+
+def _clamp_layout(t: DistTensor, lay: Layout) -> Layout:
+    """AoSoA cannot carry halo/partition on the tiled (last) dim; fall back
+    to SoA (the per-axis layout the halo machinery favors) when it would."""
+    if lay is not Layout.AOSOA or not t.is_record:
+        return lay
+    nd = len(t.space)
+    if t.halo[nd - 1] or t.partition[nd - 1] is not None:
+        return Layout.SOA
+    return lay
+
+
+def solve_layouts(
+    segments,
+    tensors: dict[str, DistTensor],
+    overrides: Optional[dict[str, Layout]] = None,
+) -> LayoutPlan:
+    """Choose a storage layout per record tensor per segment.
+
+    Decision order per tensor (first match wins):
+
+    1. ``overrides`` — a parent executor's already-made choice (loop
+       sub-executors must agree with the enclosing plan);
+    2. ``DistTensor.pin_layout`` — the user's pin;
+    3. the first node-level preference (``TensorArg.layout``) in node
+       order, clamped by halo/partition feasibility;
+    4. the tensor's declared layout (clamped the same way).
+
+    Segments are the executor's host-boundary segmentation, so a
+    device-only graph is one segment and gets one uniform decision.
+    """
+    overrides = overrides or {}
+
+    def choose(nodes) -> dict[str, Layout]:
+        hints: dict[str, Layout] = {}
+        seen: set[str] = set()
+        no_aosoa: set[str] = set()
+        for node in nodes:
+            for a in node.args:
+                if isinstance(a, TensorArg):
+                    t, hint = a.tensor, a.layout
+                elif isinstance(a, DistTensor):
+                    t, hint = a, None
+                else:
+                    continue
+                if not t.is_record:
+                    continue
+                seen.add(t.name)
+                # feasibility is per ACCESS handle: halo widths are
+                # access-level (storage_key excludes them), so any haloed
+                # access vetoes AoSoA for the shared storage
+                if _clamp_layout(t, Layout.AOSOA) is not Layout.AOSOA:
+                    no_aosoa.add(t.name)
+                if hint is not None and t.name not in hints:
+                    hints[t.name] = hint
+        out: dict[str, Layout] = {}
+        for name in seen:
+            t = tensors[name]
+            if name in overrides:
+                out[name] = overrides[name]
+            elif t.pin_layout:
+                # an infeasible pin is a user error, surfaced at
+                # construction (mesh or not), never worked around
+                if t.layout is Layout.AOSOA and (
+                        name in no_aosoa
+                        or _clamp_layout(t, Layout.AOSOA)
+                        is not Layout.AOSOA):
+                    raise ValueError(
+                        f"{name}: pinned AOSOA layout is infeasible — the "
+                        f"tensor carries a halo or partition on the tiled "
+                        f"(last) space dim")
+                out[name] = t.layout
+            else:
+                lay = _clamp_layout(t, hints.get(name, t.layout))
+                if lay is Layout.AOSOA and name in no_aosoa:
+                    lay = Layout.SOA
+                out[name] = lay
+        return out
+
+    per_segment = [choose(list(_segment_nodes(k, p))) for k, p in segments]
+
+    plan = LayoutPlan(per_segment=per_segment)
+    current: dict[str, Layout] = {}
+    for i, seg in enumerate(per_segment):
+        for name, lay in seg.items():
+            cur = current.get(name)
+            if cur is None:
+                plan.initial[name] = lay
+            elif cur is not lay:
+                plan.relayouts.append(RelayoutStep(i, name, cur, lay))
+            current[name] = lay
+    for name, t in tensors.items():
+        if t.is_record and name not in plan.initial:
+            plan.initial[name] = t.layout
+    return plan
+
+
 class Executor:
     """Compile + run a Graph against an optional mesh."""
 
     def __init__(self, graph: Graph, mesh: Optional[Mesh] = None,
-                 donate: bool = True):
+                 donate: bool = True,
+                 layout_overrides: Optional[dict[str, Layout]] = None):
         self.graph = graph
         self.mesh = mesh
         self.donate = donate
         self.tensors = graph.all_tensors()
         self.results = graph.all_results()
-        if mesh is not None:
-            for t in self.tensors.values():
-                t.validate_mesh(mesh)
         self._segments = self._build_segments(graph)
+        self.plan = solve_layouts(self._segments, self.tensors,
+                                  overrides=layout_overrides)
+        # physical layout of each record tensor's state entry right now
+        self._state_layouts: dict[str, Layout] = dict(self.plan.initial)
+        if mesh is not None:
+            for name, t in self.tensors.items():
+                lays = {self.plan.initial.get(name, t.layout)}
+                lays.update(seg[name] for seg in self.plan.per_segment
+                            if name in seg)
+                for lay in lays:
+                    (t.with_(layout=lay) if t.is_record
+                     else t).validate_mesh(mesh)
         self._jitted: dict[int, Callable] = {}
+
+    # -- layout plumbing ---------------------------------------------------
+    def _eff(self, t: DistTensor) -> DistTensor:
+        """The tensor handle in its *current physical* layout."""
+        if not t.is_record:
+            return t
+        lay = self._state_layouts.get(t.name, t.layout)
+        return t if lay is t.layout else t.with_(layout=lay)
+
+    def _apply_segment_layouts(self, state: dict, seg: int) -> dict:
+        """Insert the solver's relayout steps before segment ``seg``:
+        convert every tensor whose physical layout disagrees with the
+        segment's chosen layout (paper: explicit layout-interop nodes)."""
+        return self._convert_layouts(state, self.plan.per_segment[seg])
+
+    def _restore_initial_layouts(self, state: dict) -> dict:
+        """Undo trailing conversions so that outside a call every state
+        dict is in the plan's initial layouts — state dicts stay
+        interchangeable between calls, re-inits, and ``read``."""
+        return self._convert_layouts(state, self.plan.initial)
+
+    def _convert_layouts(self, state: dict,
+                         targets: dict[str, Layout]) -> dict:
+        for name, lay in targets.items():
+            t = self.tensors[name]
+            cur = self._state_layouts.get(name, t.layout)
+            if cur is lay:
+                continue
+            arr = relayout(RecordArray(state[name], t.spec, cur), lay)
+            data = arr.data
+            self._state_layouts[name] = lay
+            if self.mesh is not None:
+                data = jax.device_put(data,
+                                      self._eff(t).sharding(self.mesh))
+            state[name] = data
+        return state
 
     # -- state management ------------------------------------------------
     def init_state(self, **overrides) -> dict[str, Any]:
-        """Allocate all tensors/results (zeros unless overridden)."""
+        """Allocate all tensors/results (zeros unless overridden).
+
+        Record tensors are materialized directly in the layout the solver
+        chose for their first consuming segment; a RecordArray override in
+        another layout is relayouted on the way in."""
+        self._state_layouts = dict(self.plan.initial)
         state: dict[str, Any] = {}
         for name, t in self.tensors.items():
+            eff = self._eff(t)
             if name in overrides:
                 v = overrides[name]
-                data = v.data if isinstance(v, RecordArray) else jnp.asarray(v)
+                if isinstance(v, RecordArray):
+                    data = relayout(v, eff.layout).data
+                elif t.is_record:
+                    v = jnp.asarray(v)
+                    src = self._infer_override_layout(t, v.shape)
+                    data = relayout(RecordArray(v, t.spec, src),
+                                    eff.layout).data
+                else:
+                    data = jnp.asarray(v)
                 if self.mesh is not None:
-                    data = jax.device_put(data, t.sharding(self.mesh))
+                    data = jax.device_put(data, eff.sharding(self.mesh))
                 state[name] = data
             else:
-                v = t.init(self.mesh)
+                v = eff.init(self.mesh)
                 state[name] = v.data if isinstance(v, RecordArray) else v
         for name, r in self.results.items():
             state[name] = jnp.asarray(r.init, dtype=r.dtype)
         return state
+
+    def _infer_override_layout(self, t: DistTensor, shape) -> Layout:
+        """Which layout a raw (non-RecordArray) record override is stored
+        in, by matching the storage shape against each layout's.  The two
+        plausible sources are the solver's initial layout (an executor-
+        produced state entry outside a call is always in it) and the
+        declared layout (hand-built arrays).  When those differ and the
+        shape matches both, guessing could silently scramble the data, so
+        we refuse and ask for a RecordArray; otherwise the unique
+        matching candidate wins."""
+        def fits(lay):
+            return tuple(shape) == RecordArray.storage_shape(
+                t.spec, t.space, lay)
+
+        preferred = list(dict.fromkeys(
+            [self.plan.initial.get(t.name, t.layout), t.layout]))
+        matches = [lay for lay in preferred if fits(lay)]
+        if len(matches) == 1:
+            return matches[0]
+        if len(matches) > 1:
+            raise ValueError(
+                f"{t.name}: override shape {tuple(shape)} is ambiguous "
+                f"between layouts {[m.name for m in matches]} for space "
+                f"{t.space} — pass a RecordArray to make it explicit")
+        others = [lay for lay in Layout
+                  if lay not in preferred and fits(lay)]
+        if len(others) == 1:
+            return others[0]
+        if others:
+            raise ValueError(
+                f"{t.name}: override shape {tuple(shape)} is ambiguous "
+                f"between layouts {[m.name for m in others]} for space "
+                f"{t.space} — pass a RecordArray to make it explicit")
+        raise ValueError(
+            f"{t.name}: override shape {tuple(shape)} matches no layout's "
+            f"storage shape for space {t.space} "
+            f"(pass a RecordArray to make the layout explicit)")
 
     def state_shardings(self, state: dict) -> dict:
         if self.mesh is None:
@@ -130,13 +389,14 @@ class Executor:
         out = {}
         for k in state:
             t = self.tensors.get(k)
-            spec = t.pspec() if t is not None else P()
+            spec = self._eff(t).pspec() if t is not None else P()
             out[k] = NamedSharding(self.mesh, spec)
         return out
 
     def read(self, state: dict, t: DistTensor):
-        """Wrap a state entry back into its RecordArray view."""
-        return t.wrap(state[t.name])
+        """Wrap a state entry back into its RecordArray view (in the
+        tensor's current physical layout; accessors hide the difference)."""
+        return self._eff(t).wrap(state[t.name])
 
     # -- segmentation ------------------------------------------------------
     def _build_segments(self, graph: Graph):
@@ -210,6 +470,7 @@ class Executor:
             if t is None:
                 vals.append(a)
                 continue
+            t = self._eff(t)
             data = state[t.name]
             if mode.padded:
                 data = _apply_halo(data, t, mesh)
@@ -252,6 +513,7 @@ class Executor:
         for i, t, mode in node.tensor_args():
             if not mode.padded:
                 continue
+            t = self._eff(t)
             entries = [e for e in _halo_plan(t, self.mesh) if e.mesh_axis]
             if len(entries) == 1:
                 cands.append((t, entries[0]))
@@ -280,6 +542,7 @@ class Executor:
                 if at is None:
                     vals.append(a)
                     continue
+                at = self._eff(at)
                 data = state[at.name]
                 if at.name == t.name and mode.padded:
                     # boundary-pad the non-partitioned haloed dims first
@@ -329,14 +592,14 @@ class Executor:
         left = run("left")
         right = run("right")
         for wt, li, ii, ri in zip(write_tensors, left, interior, right):
-            state[wt.name] = jnp.concatenate([li, ii, ri],
-                                             axis=wt.storage_axis(entry.dim))
+            state[wt.name] = jnp.concatenate(
+                [li, ii, ri], axis=self._eff(wt).storage_axis(entry.dim))
 
     def _lower_reduce(self, node: Node, state: dict, sharded: bool) -> None:
         t, field = node.args
         data = state[t.name]
         if t.is_record and field is not None:
-            data = t.wrap(data).field(field)
+            data = self._eff(t).wrap(data).field(field)
         local = node.reducer.local(data)
         if sharded:
             axes = tuple({ax for ax in t.partition if ax is not None
@@ -396,16 +659,20 @@ class Executor:
         in_specs = {}
         # specs must cover exactly the state dict; build lazily per call
         def call(state):
-            specs = {k: (self.tensors[k].pspec() if k in self.tensors else P())
+            specs = {k: (self._eff(self.tensors[k]).pspec()
+                         if k in self.tensors else P())
                      for k in state}
-            fn = jax.shard_map(body, mesh=self.mesh, in_specs=(specs,),
+            fn = shard_map(body, mesh=self.mesh, in_specs=(specs,),
                                out_specs=specs, check_vma=False)
             return fn(state)
 
         return jax.jit(call, donate_argnums=0 if self.donate else ())
 
-    def _loop_fn(self, sub: Graph) -> Callable:
-        sub_exec = Executor(sub, self.mesh, donate=False)
+    def _loop_fn(self, sub: Graph, seg: int) -> Callable:
+        # the sub-executor must agree with the enclosing plan: layouts are
+        # loop-invariant inside one compiled while body
+        sub_exec = Executor(sub, self.mesh, donate=False,
+                            layout_overrides=self.plan.per_segment[seg])
         sharded = self.mesh is not None and any(
             ax is not None for t in sub_exec.tensors.values()
             for ax in t.partition)
@@ -420,14 +687,14 @@ class Executor:
 
         def call(state):
             if sharded:
-                specs = {k: (sub_exec.tensors[k].pspec()
+                specs = {k: (sub_exec._eff(sub_exec.tensors[k]).pspec()
                              if k in sub_exec.tensors else P())
                          for k in state}
 
                 def shard_body(s):
                     return lax.while_loop(sub.condition, body_fn, body_fn(s))
 
-                fn = jax.shard_map(shard_body, mesh=self.mesh,
+                fn = shard_map(shard_body, mesh=self.mesh,
                                    in_specs=(specs,), out_specs=specs,
                                    check_vma=False)
                 return fn(state)
@@ -436,8 +703,30 @@ class Executor:
         return jax.jit(call, donate_argnums=0 if self.donate else ())
 
     # -- public execution -----------------------------------------------------
+    @contextmanager
+    def _layout_epoch(self):
+        """Invariant bracket: incoming states are in the plan's initial
+        layouts, and whatever happens inside (including an exception),
+        the bookkeeping ends at initial again — any state the caller
+        still holds outside a call is in the initial layouts."""
+        self._state_layouts = dict(self.plan.initial)
+        try:
+            yield
+        finally:
+            self._state_layouts = dict(self.plan.initial)
+
     def __call__(self, state: dict) -> dict:
+        with self._layout_epoch():
+            state = self._call_segments(dict(state))
+            return self._restore_initial_layouts(dict(state))
+
+    def _call_segments(self, state: dict) -> dict:
+        """One pass over all segments; relayouts are runtime-driven from
+        the current physical layouts, so repeated passes (``run``'s
+        fallback loop) only convert where consecutive iterations actually
+        disagree instead of restoring after every pass."""
         for i, (kind, payload) in enumerate(self._segments):
+            state = self._apply_segment_layouts(state, i)
             if kind == "device":
                 fn = self._jitted.get(i)
                 if fn is None:
@@ -446,10 +735,12 @@ class Executor:
             elif kind == "loop":
                 fn = self._jitted.get(i)
                 if fn is None:
-                    fn = self._jitted[i] = self._loop_fn(payload)
+                    fn = self._jitted[i] = self._loop_fn(payload, i)
                 state = fn(state)
             elif kind == "host_loop":
-                sub_exec = Executor(payload, self.mesh, donate=False)
+                sub_exec = Executor(
+                    payload, self.mesh, donate=False,
+                    layout_overrides=self.plan.per_segment[i])
                 state = sub_exec(state)
                 while bool(jax.device_get(payload.condition(state))):
                     state = sub_exec(state)
@@ -470,6 +761,17 @@ class Executor:
             return state
         if (self.graph.is_device_only() and self.graph.condition is None
                 and all(k == "device" for k, _ in self._segments)):
+            return self._run_fused(state, steps)
+        with self._layout_epoch():
+            for _ in range(steps):
+                state = self._call_segments(dict(state))
+            return self._restore_initial_layouts(dict(state))
+
+    def _run_fused(self, state: dict, steps: int) -> dict:
+        """Device-only fast path: all steps in one jitted fori_loop."""
+        with self._layout_epoch():
+            for i in range(len(self._segments)):
+                state = self._apply_segment_layouts(dict(state), i)
             levels = [lv for _, seg in self._segments for lv in seg]
             sharded = self.mesh is not None and any(
                 ax is not None for t in self.tensors.values()
@@ -480,20 +782,19 @@ class Executor:
 
             def call(s):
                 if sharded:
-                    specs = {k: (self.tensors[k].pspec()
+                    specs = {k: (self._eff(self.tensors[k]).pspec()
                                  if k in self.tensors else P())
                              for k in s}
-                    fn = jax.shard_map(
+                    fn = shard_map(
                         lambda st: lax.fori_loop(0, steps, body, st),
                         mesh=self.mesh, in_specs=(specs,), out_specs=specs,
                         check_vma=False)
                     return fn(s)
                 return lax.fori_loop(0, steps, body, s)
 
-            return jax.jit(call, donate_argnums=0 if self.donate else ())(state)
-        for _ in range(steps):
-            state = self(state)
-        return state
+            out = jax.jit(call,
+                          donate_argnums=0 if self.donate else ())(state)
+            return self._restore_initial_layouts(dict(out))
 
 
 def execute(graph: Graph, mesh: Optional[Mesh] = None, steps: int = 1,

@@ -27,12 +27,14 @@ import itertools
 from dataclasses import dataclass, field as dfield
 from typing import Any, Callable, Optional, Sequence, Union
 
+from .layout import Layout
 from .tensor import DistTensor, ReductionResult
 
 __all__ = [
     "ExecutionKind",
     "AccessMode",
     "TensorArg",
+    "preferred_layout",
     "concurrent_padded_access",
     "exclusive_padded_access",
     "in_shared",
@@ -91,6 +93,19 @@ class AccessMode(enum.Enum):
 class TensorArg:
     tensor: DistTensor
     mode: AccessMode = AccessMode.DEFAULT
+    layout: Optional[Layout] = None  # kernel's preferred layout (solver hint)
+
+
+def preferred_layout(t: DistTensor | TensorArg,
+                     layout: Layout) -> TensorArg:
+    """Annotate an argument with the kernel's preferred layout.
+
+    A *hint*, not a pin: the executor's layout solver honors it unless a
+    stronger constraint (user ``pin_layout`` or a padded-access
+    requirement) overrides it."""
+    if isinstance(t, TensorArg):
+        return TensorArg(t.tensor, t.mode, layout)
+    return TensorArg(t, AccessMode.DEFAULT, layout)
 
 
 def concurrent_padded_access(t: DistTensor) -> TensorArg:
@@ -197,6 +212,22 @@ class Graph:
     def _exec(self, kind: Optional[ExecutionKind]) -> ExecutionKind:
         return kind if kind is not None else self.default_exec
 
+    @staticmethod
+    def _hint_args(args: tuple, layout: Optional[Layout]) -> tuple:
+        """Apply a node-level ``layout=`` preference to record tensor args
+        that don't already carry their own hint."""
+        if layout is None:
+            return args
+        out = []
+        for a in args:
+            if isinstance(a, TensorArg) and a.layout is None \
+                    and a.tensor.is_record:
+                a = TensorArg(a.tensor, a.mode, layout)
+            elif isinstance(a, DistTensor) and a.is_record:
+                a = TensorArg(a, AccessMode.DEFAULT, layout)
+            out.append(a)
+        return tuple(out)
+
     def _add(self, level: list[Node], item, exec_kind, **kw) -> None:
         if isinstance(item, Graph):
             level.append(Node(kind="loop" if item.condition else "subgraph",
@@ -207,16 +238,23 @@ class Graph:
 
     # -- paper API -----------------------------------------------------------
     def emplace(self, *items, exec_kind: Optional[ExecutionKind] = None,
-                **kw) -> "Graph":
-        """Add node(s)/subgraph(s) to the *current* level (parallel)."""
+                layout: Optional[Layout] = None, **kw) -> "Graph":
+        """Add node(s)/subgraph(s) to the *current* level (parallel).
+
+        ``layout=`` marks every record tensor in ``args`` with the node's
+        preferred layout (a solver hint, see ``core/executor.py``)."""
+        if "args" in kw:
+            kw["args"] = self._hint_args(tuple(kw["args"]), layout)
         level = self._current_level()
         for item in items:
             self._add(level, item, exec_kind, kind="op", **kw)
         return self
 
     def then(self, *items, exec_kind: Optional[ExecutionKind] = None,
-             **kw) -> "Graph":
+             layout: Optional[Layout] = None, **kw) -> "Graph":
         """Add node(s)/subgraph(s) on a *new* level (sequential dep)."""
+        if "args" in kw:
+            kw["args"] = self._hint_args(tuple(kw["args"]), layout)
         level = self._new_level()
         for item in items:
             self._add(level, item, exec_kind, kind="op", **kw)
@@ -225,11 +263,12 @@ class Graph:
     def split(self, fn: Callable, *args: NodeArg,
               writes: Optional[Sequence[int]] = None,
               exec_kind: Optional[ExecutionKind] = None,
-              overlap: bool = False) -> "Graph":
+              overlap: bool = False,
+              layout: Optional[Layout] = None) -> "Graph":
         """Tensor op on the current level; becomes one node per partition
         (paper §5.3.3) — here: SPMD over the tensor's mesh axes."""
         self._current_level().append(
-            Node(kind="split", fn=fn, args=tuple(args),
+            Node(kind="split", fn=fn, args=self._hint_args(args, layout),
                  writes=None if writes is None else tuple(writes),
                  exec_kind=self._exec(exec_kind), overlap=overlap))
         return self
@@ -237,10 +276,11 @@ class Graph:
     def then_split(self, fn: Callable, *args: NodeArg,
                    writes: Optional[Sequence[int]] = None,
                    exec_kind: Optional[ExecutionKind] = None,
-                   overlap: bool = False) -> "Graph":
+                   overlap: bool = False,
+                   layout: Optional[Layout] = None) -> "Graph":
         self._new_level()
         return self.split(fn, *args, writes=writes, exec_kind=exec_kind,
-                          overlap=overlap)
+                          overlap=overlap, layout=layout)
 
     def reduce(self, tensor: DistTensor, result: ReductionResult,
                reducer: Reducer, field: Optional[str] = None) -> "Graph":

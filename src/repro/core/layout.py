@@ -7,13 +7,29 @@ parameter, with accessors that make kernel code layout-independent.
 Here a :class:`RecordSpec` plays the role of ``StorageDescriptor`` and a
 :class:`RecordArray` is the materialized storage over a space:
 
-* ``Layout.AOS``  -> one array of shape ``(*space, C)``   (components minor)
-* ``Layout.SOA``  -> one array of shape ``(C, *space)``   (space minor)
+* ``Layout.AOS``   -> one array of shape ``(*space, C)``   (components minor)
+* ``Layout.SOA``   -> one array of shape ``(C, *space)``   (space minor)
+* ``Layout.AOSOA`` -> one array of shape ``(*space[:-1], n_tiles, C, tile)``
+  — the tiled hybrid: the last space dimension is blocked into
+  lane-width-aligned tiles and the component axis sits *between* tiles,
+  so each record tile is contiguous (AoS-ish locality) while every
+  component within a tile fills whole VREG lanes (SoA-ish vectorization).
+  ``tile = gcd(n, 128)``: lane-aligned whenever the extent allows, and
+  always an exact tiling (no padding), so conversions are value-exact.
 
 TPU note (DESIGN.md §2): on GPU SoA wins via warp coalescing; on TPU it
 wins because the minor-most dimension fills the 128-lane VREGs and gives
 contiguous HBM->VMEM DMA, while a small minor component dim wastes lanes.
-Same paper conclusion, different mechanism.
+Same paper conclusion, different mechanism.  AoSoA keeps the lane-filling
+minor dim *and* record locality — the paper's "blocked" layout family.
+
+Conversions between any two layouts go through :func:`relayout` (or
+``RecordArray.with_layout``), a transpose+reshape that the executor's
+layout solver inserts at jit-segment boundaries when the producing and
+consuming segments disagree (see ``core/executor.py``).  AoSoA storage
+does not support halo or partitioning along the tiled (last) space
+dimension — the solver never selects it for such tensors, and a user pin
+that forces it raises at validation time.
 
 ``RecordArray`` is a pytree, so it moves freely through jit / shard_map /
 grad, and :class:`RecordRef` provides the same named accessors over Pallas
@@ -23,6 +39,7 @@ grad, and :class:`RecordRef` provides the same named accessors over Pallas
 from __future__ import annotations
 
 import enum
+import math
 from dataclasses import dataclass
 from typing import Any, Mapping, Sequence
 
@@ -37,17 +54,37 @@ __all__ = [
     "RecordSpec",
     "RecordArray",
     "RecordRef",
+    "relayout",
+    "dispatch_with_relayout",
+    "aosoa_tile",
+    "AOSOA_LANE",
+    "record_grid_1d",
 ]
 
 
 class Layout(enum.Enum):
     """Storage layout for record data (paper: contiguous vs strided)."""
 
-    AOS = "aos"  # array-of-structs: components contiguous per cell
-    SOA = "soa"  # struct-of-arrays: each component contiguous over space
+    AOS = "aos"      # array-of-structs: components contiguous per cell
+    SOA = "soa"      # struct-of-arrays: each component contiguous over space
+    AOSOA = "aosoa"  # tiled hybrid: lane-aligned component blocks
 
     def __repr__(self) -> str:  # nicer in config dumps
         return f"Layout.{self.name}"
+
+
+AOSOA_LANE = 128  # TPU VREG lane width: preferred AoSoA tile extent
+
+
+def aosoa_tile(n: int) -> int:
+    """Tile extent for an AoSoA last-space-dim of ``n`` cells.
+
+    ``gcd(n, 128)`` — full lane width whenever ``n`` allows, otherwise the
+    largest lane-divisor that tiles ``n`` exactly, so no shape ever needs
+    padding and every relayout is a pure permutation of values."""
+    if n < 1:
+        raise ValueError(f"space extent must be >= 1, got {n}")
+    return math.gcd(n, AOSOA_LANE)
 
 
 @dataclass(frozen=True)
@@ -107,10 +144,6 @@ class RecordSpec:
                 return start, f.size
             start += f.size
         raise KeyError(f"no field {name!r} in {self.names}")
-
-
-def _component_axis(layout: Layout, ndim_space: int) -> int:
-    return ndim_space if layout is Layout.AOS else 0
 
 
 @jax.tree_util.register_pytree_node_class
@@ -191,14 +224,23 @@ class RecordArray:
         spec: RecordSpec, space: Sequence[int], layout: Layout
     ) -> tuple[int, ...]:
         c = spec.num_components
-        return (*space, c) if layout is Layout.AOS else (c, *space)
+        space = tuple(space)
+        if layout is Layout.AOS:
+            return (*space, c)
+        if layout is Layout.SOA:
+            return (c, *space)
+        tile = aosoa_tile(space[-1])
+        return (*space[:-1], space[-1] // tile, c, tile)
 
     # -- basic properties -------------------------------------------------
     @property
     def space(self) -> tuple[int, ...]:
         if self.layout is Layout.AOS:
             return self.data.shape[:-1]
-        return self.data.shape[1:]
+        if self.layout is Layout.SOA:
+            return self.data.shape[1:]
+        s = self.data.shape
+        return (*s[:-3], s[-3] * s[-1])
 
     @property
     def dtype(self):
@@ -220,8 +262,11 @@ class RecordArray:
         start, size = self.spec.offset(name)
         if self.layout is Layout.AOS:
             v = self.data[..., start : start + size]
-        else:
+        elif self.layout is Layout.SOA:
             v = jnp.moveaxis(self.data[start : start + size], 0, -1)
+        else:  # AOSOA (*sp', nt, C, tile) -> (*sp', nt, tile, size) -> merge
+            v = jnp.moveaxis(self.data[..., start : start + size, :], -2, -1)
+            v = v.reshape(*self.space, size)
         return v[..., 0] if size == 1 else v
 
     f = field  # short alias used heavily in kernels/examples
@@ -237,9 +282,15 @@ class RecordArray:
             )
         if self.layout is Layout.AOS:
             data = self.data.at[..., start : start + size].set(value)
-        else:
+        elif self.layout is Layout.SOA:
             data = self.data.at[start : start + size].set(
                 jnp.moveaxis(value, -1, 0)
+            )
+        else:  # AOSOA: (*space, size) -> (*sp', nt, tile, size) -> swap
+            nt, tile = self.data.shape[-3], self.data.shape[-1]
+            v = value.reshape(*self.space[:-1], nt, tile, size)
+            data = self.data.at[..., start : start + size, :].set(
+                jnp.moveaxis(v, -1, -2)
             )
         return RecordArray(data, self.spec, self.layout)
 
@@ -247,14 +298,36 @@ class RecordArray:
         return {f.name: self.field(f.name) for f in self.spec.fields}
 
     # -- layout interop (paper: "interoperability of the layouts") ---------
+    def _to_aos_data(self) -> jax.Array:
+        """Canonical AoS view ``(*space, C)`` of the storage."""
+        nd = len(self.space)
+        if self.layout is Layout.AOS:
+            return self.data
+        if self.layout is Layout.SOA:
+            return jnp.moveaxis(self.data, 0, nd)
+        # AOSOA (*sp', nt, C, tile) -> (*sp', nt, tile, C) -> (*space, C)
+        v = jnp.moveaxis(self.data, -2, -1)
+        return v.reshape(*self.space, self.num_components)
+
     def with_layout(self, layout: Layout) -> "RecordArray":
+        """Convert to ``layout`` (value-exact; all pairs go via AoS).
+
+        The transpose is materialized (``.copy()``) so downstream DMA /
+        kernels see the new physical order — this is the relayout cost the
+        executor's solver weighs against kernel layout preferences."""
         if layout is self.layout:
             return self
-        nd = len(self.space)
-        if layout is Layout.SOA:  # (*space, C) -> (C, *space)
-            data = jnp.moveaxis(self.data, nd, 0)
-        else:  # (C, *space) -> (*space, C)
-            data = jnp.moveaxis(self.data, 0, nd)
+        aos = self._to_aos_data()
+        space = self.space
+        if layout is Layout.AOS:
+            data = aos
+        elif layout is Layout.SOA:
+            data = jnp.moveaxis(aos, len(space), 0)
+        else:  # AOS -> AOSOA
+            tile = aosoa_tile(space[-1])
+            c = self.num_components
+            v = aos.reshape(*space[:-1], space[-1] // tile, tile, c)
+            data = jnp.moveaxis(v, -1, -2)
         # materialize the transpose so downstream DMA sees the new layout
         return RecordArray(data.copy(), self.spec, layout)
 
@@ -268,7 +341,37 @@ class RecordArray:
         nd = len(self.space)
         if not 0 <= dim < nd:
             raise ValueError(f"dim {dim} out of range for space {self.space}")
-        return dim if self.layout is Layout.AOS else dim + 1
+        if self.layout is Layout.AOS:
+            return dim
+        if self.layout is Layout.SOA:
+            return dim + 1
+        if dim == nd - 1:
+            raise ValueError(
+                "AOSOA tiles the last space dim across two storage axes; "
+                "per-axis ops (halo, partition) are unsupported there")
+        return dim
+
+
+def relayout(arr: RecordArray, target: Layout) -> RecordArray:
+    """Convert ``arr`` to ``target`` layout (no-op when already there).
+
+    The paper's layout interoperability as a first-class graph operation:
+    the executor's layout solver emits exactly this at segment boundaries
+    when a producer and consumer disagree on a tensor's layout."""
+    return arr.with_layout(target)
+
+
+def dispatch_with_relayout(kernel_fn, rec: RecordArray, *args,
+                           supported: Sequence[Layout],
+                           preferred: Layout, **kw):
+    """Run ``kernel_fn(rec, *args, **kw)``, staging ``rec`` through
+    ``preferred`` when its layout is not in ``supported`` and converting
+    the result back — the single implementation of the relayout-fallback
+    contract every kernel ops wrapper shares."""
+    if rec.layout in supported:
+        return kernel_fn(rec, *args, **kw)
+    out = kernel_fn(relayout(rec, preferred), *args, **kw)
+    return relayout(out, rec.layout)
 
 
 class RecordRef:
@@ -278,8 +381,11 @@ class RecordRef:
     in ``RecordRef(ref, spec, layout)`` gives the same ``.get/.set`` component
     API in both layouts, so kernels are written once (paper's core claim).
 
-    Components are returned as plain ``(*block_space)`` arrays — the layout
-    only changes *where* they live in the block.
+    Components are returned as plain ``(*block_space)`` arrays for AoS/SoA —
+    the layout only changes *where* they live in the block.  For AoSoA the
+    component keeps its tiled block shape ``(*lead, n_tiles, tile)``: get
+    and set are symmetric, so elementwise kernel bodies (the common case)
+    are still layout-oblivious.
     """
 
     __slots__ = ("ref", "spec", "layout")
@@ -296,7 +402,9 @@ class RecordRef:
         idx = start + comp
         if self.layout is Layout.AOS:
             return self.ref[..., idx]
-        return self.ref[idx]
+        if self.layout is Layout.SOA:
+            return self.ref[idx]
+        return self.ref[..., idx, :]
 
     def set(self, name: str, value, comp: int = 0) -> None:
         start, size = self.spec.offset(name)
@@ -305,13 +413,39 @@ class RecordRef:
         idx = start + comp
         if self.layout is Layout.AOS:
             self.ref[..., idx] = value
-        else:
+        elif self.layout is Layout.SOA:
             self.ref[idx] = value
+        else:
+            self.ref[..., idx, :] = value
 
     def get_vector(self, name: str):
         """All components of a vector field, stacked on a NEW leading axis."""
         start, size = self.spec.offset(name)
         return jnp.stack([self.get(name, i) for i in range(size)], axis=0)
+
+
+def record_grid_1d(spec: RecordSpec, layout: Layout, n: int, block: int):
+    """Grid + BlockSpec for a 1-d record kernel processing ``block`` cells
+    per program, in any layout (the single place the AoSoA tiling math
+    lives — kernels over 1-d record spaces should not re-derive it).
+
+    AoS/SoA: ``block`` must divide ``n``.  AoSoA: each program receives
+    whole ``(bt, C, tile)`` record tiles, ``bt`` the largest tile count
+    <= block/tile that divides the total tile count.
+    """
+    from jax.experimental import pallas as pl  # local: keep core import-light
+
+    c = spec.num_components
+    if layout is Layout.AOS:
+        return (n // block,), pl.BlockSpec((block, c), lambda i: (i, 0))
+    if layout is Layout.SOA:
+        return (n // block,), pl.BlockSpec((c, block), lambda i: (0, i))
+    tile = aosoa_tile(n)
+    bt = max(block // tile, 1)
+    nt = n // tile
+    while nt % bt:
+        bt -= 1
+    return (nt // bt,), pl.BlockSpec((bt, c, tile), lambda i: (i, 0, 0))
 
 
 def block_spec_for(
@@ -325,6 +459,11 @@ def block_spec_for(
 
     ``space_index_map(*grid_ids) -> space block indices`` — layout handling
     (where the component axis sits) is done here so kernels never branch.
+
+    For ``Layout.AOSOA`` the last entry of ``space_block`` must equal the
+    storage tile extent (``aosoa_tile`` of the space extent) and the index
+    map's last output addresses tile-count units: each program gets one
+    whole ``(…, 1, C, tile)`` record tile.
     """
     from jax.experimental import pallas as pl  # local: keep core import-light
 
@@ -335,10 +474,18 @@ def block_spec_for(
         def index_map(*ids):
             return (*space_index_map(*ids), 0)
 
-    else:
+    elif layout is Layout.SOA:
         block = (c, *space_block)
 
         def index_map(*ids):
             return (0, *space_index_map(*ids))
+
+    else:  # AOSOA: the last space-block extent must be whole tiles; the
+        # grid index along that dim addresses tile-count units.
+        tile = space_block[-1]
+        block = (*space_block[:-1], 1, c, tile)
+
+        def index_map(*ids):
+            return (*space_index_map(*ids), 0, 0)
 
     return pl.BlockSpec(block, index_map)

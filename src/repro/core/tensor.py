@@ -38,6 +38,7 @@ class DistTensor:
     dtype: Any = jnp.float32
     spec: Optional[RecordSpec] = None          # None -> scalar cells
     layout: Layout = Layout.SOA
+    pin_layout: bool = False                   # user pin: solver must honor
     partition: tuple[Optional[str], ...] = ()  # mesh axis per space dim
     halo: tuple[int, ...] = ()
     boundary: Boundary = Boundary.TRANSMISSIVE
@@ -67,7 +68,15 @@ class DistTensor:
         """Storage axis for space dim (skips the SoA component axis)."""
         if not self.is_record:
             return dim
-        return dim if self.layout is Layout.AOS else dim + 1
+        if self.layout is Layout.AOS:
+            return dim
+        if self.layout is Layout.SOA:
+            return dim + 1
+        if dim == len(self.space) - 1:
+            raise ValueError(
+                f"{self.name}: AOSOA tiles the last space dim; halo/"
+                f"per-axis ops are unsupported there")
+        return dim
 
     # -- sharding ----------------------------------------------------------
     def pspec(self) -> P:
@@ -76,8 +85,11 @@ class DistTensor:
         if self.is_record:
             if self.layout is Layout.AOS:
                 dims = dims + [None]
-            else:
+            elif self.layout is Layout.SOA:
                 dims = [None] + dims
+            else:  # AOSOA: (*space[:-1], n_tiles, C, tile); the tiled dim
+                # must stay unsharded (validate_mesh enforces it)
+                dims = dims[:-1] + [None, None, None]
         return P(*dims)
 
     def sharding(self, mesh: Mesh) -> NamedSharding:
@@ -93,6 +105,16 @@ class DistTensor:
         )
 
     def validate_mesh(self, mesh: Mesh) -> None:
+        if self.is_record and self.layout is Layout.AOSOA:
+            nd = len(self.space)
+            if self.partition[nd - 1] is not None:
+                raise ValueError(
+                    f"{self.name}: AOSOA cannot be partitioned along the "
+                    f"tiled (last) space dim")
+            if self.halo[nd - 1]:
+                raise ValueError(
+                    f"{self.name}: AOSOA cannot carry a halo on the tiled "
+                    f"(last) space dim")
         for d, ax in enumerate(self.partition):
             if ax is None:
                 continue

@@ -1,11 +1,14 @@
 """Particle update Pallas kernel (paper §7.2, Table 3) — layout polymorphic.
 
 ``x += v * dt`` for N particles with 3-d position/velocity stored in ONE
-record buffer as AoS ``(n, 6)`` or SoA ``(6, n)``.  The kernel body is
-written once against :class:`RecordRef`; the layout only changes the
-BlockSpec.  On TPU the SoA block streams 128-lane contiguous VREGs per
-component while the AoS block wastes lanes on the 6-wide minor dim —
-the paper's coalescing argument, relocated to lane tiling (DESIGN.md §2).
+record buffer as AoS ``(n, 6)``, SoA ``(6, n)`` or AoSoA
+``(n_tiles, 6, tile)``.  The kernel body is written once against
+:class:`RecordRef`; the layout only changes the BlockSpec.  On TPU the
+SoA block streams 128-lane contiguous VREGs per component while the AoS
+block wastes lanes on the 6-wide minor dim — the paper's coalescing
+argument, relocated to lane tiling (DESIGN.md §2).  AoSoA keeps the
+lane-filling tile minor AND whole records contiguous per tile, which is
+the preferred streaming layout when no cross-particle stencil exists.
 """
 
 from __future__ import annotations
@@ -16,9 +19,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.layout import Layout, RecordArray, RecordRef, RecordSpec, Vector
+from repro.core.layout import (Layout, RecordArray, RecordRef, RecordSpec,
+                               Vector, record_grid_1d)
 
 PARTICLE_SPEC = RecordSpec.create(Vector("x", 3), Vector("v", 3))
+
+# metadata consumed by the ops.py wrapper, which relayouts inputs whose
+# layout is not natively supported
+SUPPORTED_LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
+PREFERRED_LAYOUT = Layout.AOSOA
 
 
 def _particle_kernel(spec: RecordSpec, layout: Layout, dt_ref, p_ref, o_ref):
@@ -42,13 +51,7 @@ def particle_update_pallas(
     (n,) = particles.space
     spec, layout = particles.spec, particles.layout
     assert n % block == 0, f"n={n} must tile by block={block}"
-    grid = (n // block,)
-    c = spec.num_components
-
-    if layout is Layout.AOS:
-        bspec = pl.BlockSpec((block, c), lambda i: (i, 0))
-    else:
-        bspec = pl.BlockSpec((c, block), lambda i: (0, i))
+    grid, bspec = record_grid_1d(spec, layout, n, block)
 
     dt_arr = jnp.asarray(dt, dtype=particles.dtype).reshape(1)
     out = pl.pallas_call(

@@ -1,17 +1,22 @@
-"""Jitted public wrapper for the particle update."""
+"""Jitted public wrapper for the particle update (layout polymorphic:
+AoS / SoA / AoSoA, same kernel body; a layout outside SUPPORTED_LAYOUTS
+would be staged through PREFERRED_LAYOUT, mirroring the stencil wrapper)."""
 
 from functools import partial
 
 import jax
 
-from .kernel import PARTICLE_SPEC, particle_update_pallas
+from repro.core.layout import dispatch_with_relayout
+from .kernel import (PARTICLE_SPEC, PREFERRED_LAYOUT, SUPPORTED_LAYOUTS,
+                     particle_update_pallas)
 from .ref import particle_update_ref
 
 
 @partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
 def particle_update(particles, dt, *, block: int = 512, use_pallas: bool = True,
                     interpret: bool = True):
-    if use_pallas:
-        return particle_update_pallas(particles, dt, block=block,
-                                      interpret=interpret)
-    return particle_update_ref(particles, dt)
+    if not use_pallas:
+        return particle_update_ref(particles, dt)
+    return dispatch_with_relayout(
+        particle_update_pallas, particles, dt, supported=SUPPORTED_LAYOUTS,
+        preferred=PREFERRED_LAYOUT, block=block, interpret=interpret)

@@ -13,9 +13,21 @@ config): blocks must be multiples of 128 lanes for full VREG occupancy.
 
 from __future__ import annotations
 
+from functools import partial as _partial
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.layout import (Layout, RecordArray, RecordRef, RecordSpec,
+                               record_grid_1d)
+
+# record form: x and y live in ONE record buffer (paper §4.2's layout axis
+# for Table 2); metadata consumed by the ops.py wrapper, which relayouts
+# inputs whose layout is not natively supported
+SAXPY_SPEC = RecordSpec.create("x", "y")
+SUPPORTED_LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
+PREFERRED_LAYOUT = Layout.SOA
 
 
 def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):
@@ -69,3 +81,39 @@ def saxpy_pallas(
         interpret=interpret,
     )(a_arr, x, y)
     return out[:size]
+
+
+def _saxpy_record_kernel(spec: RecordSpec, layout: Layout, a_ref, p_ref,
+                         o_ref):
+    p = RecordRef(p_ref, spec, layout)
+    o = RecordRef(o_ref, spec, layout)
+    a = a_ref[0]
+    x = p.get("x")
+    o.set("x", x)
+    o.set("y", a * x + p.get("y"))
+
+
+def saxpy_record_pallas(
+    rec: RecordArray,
+    a,
+    *,
+    block: int = 1024,
+    interpret: bool = True,
+) -> RecordArray:
+    """``y = a*x + y`` over a two-field record in any of the three layouts
+    — the kernel body is a single :class:`RecordRef` program."""
+    (n,) = rec.space
+    spec, layout = rec.spec, rec.layout
+    assert n % block == 0, f"n={n} must tile by block={block}"
+    grid, bspec = record_grid_1d(spec, layout, n, block)
+
+    a_arr = jnp.asarray(a, dtype=rec.dtype).reshape(1)
+    out = pl.pallas_call(
+        _partial(_saxpy_record_kernel, spec, layout),
+        out_shape=jax.ShapeDtypeStruct(rec.data.shape, rec.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY), bspec],
+        out_specs=bspec,
+        interpret=interpret,
+    )(a_arr, rec.data)
+    return RecordArray(out, spec, layout)

@@ -1,11 +1,14 @@
-"""Jitted public wrapper for SAXPY."""
+"""Jitted public wrappers for SAXPY (flat arrays + layout-polymorphic
+record form; the record form is the paper's Table 2 layout axis)."""
 
 from functools import partial
 
 import jax
 
-from .kernel import saxpy_pallas
-from .ref import saxpy_ref
+from repro.core.layout import dispatch_with_relayout
+from .kernel import (PREFERRED_LAYOUT, SAXPY_SPEC, SUPPORTED_LAYOUTS,
+                     saxpy_pallas, saxpy_record_pallas)
+from .ref import saxpy_record_ref, saxpy_ref
 
 
 @partial(jax.jit, static_argnames=("block", "bounds_check", "use_pallas",
@@ -16,3 +19,17 @@ def saxpy(a, x, y, *, block: int = 1024, bounds_check: bool = True,
         return saxpy_pallas(a, x, y, block=block, bounds_check=bounds_check,
                             interpret=interpret)
     return saxpy_ref(a, x, y)
+
+
+@partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
+def saxpy_record(rec, a, *, block: int = 1024, use_pallas: bool = True,
+                 interpret: bool = True):
+    """``y = a*x + y`` on a RecordArray with fields ``x``/``y`` — same
+    kernel body under AoS, SoA and AoSoA (paper's polymorphism claim).
+    A layout outside SUPPORTED_LAYOUTS is staged through PREFERRED_LAYOUT
+    (all three are native today, so this is the contract, not a copy)."""
+    if not use_pallas:
+        return saxpy_record_ref(rec, a)
+    return dispatch_with_relayout(
+        saxpy_record_pallas, rec, a, supported=SUPPORTED_LAYOUTS,
+        preferred=PREFERRED_LAYOUT, block=block, interpret=interpret)

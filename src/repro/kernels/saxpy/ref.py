@@ -1,8 +1,14 @@
-"""Pure-jnp oracle for the SAXPY kernel."""
+"""Pure-jnp oracles for the SAXPY kernels (flat + record forms)."""
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.layout import RecordArray
+
 
 def saxpy_ref(a, x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.asarray(a, dtype=x.dtype) * x + y
+
+
+def saxpy_record_ref(rec: RecordArray, a) -> RecordArray:
+    return rec.set_field("y", saxpy_ref(a, rec.field("x"), rec.field("y")))

@@ -22,6 +22,12 @@ from jax.experimental import pallas as pl
 from repro.core.layout import Layout, RecordArray
 from repro.physics import euler
 
+# dispatch metadata consumed by ops.py and the executor's layout solver:
+# the halo-inclusive tile walk needs per-axis storage, so AoSoA inputs are
+# relayouted at the wrapper boundary (exactly what the solver would emit)
+SUPPORTED_LAYOUTS = (Layout.AOS, Layout.SOA)
+PREFERRED_LAYOUT = Layout.SOA
+
 
 def _flux_kernel(layout: Layout, bx: int, by: int, u_ref, lam_ref, o_ref):
     i = pl.program_id(0)

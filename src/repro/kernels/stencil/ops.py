@@ -1,17 +1,28 @@
-"""Jitted public wrapper for the FORCE flux-difference stencil."""
+"""Jitted public wrapper for the FORCE flux-difference stencil.
+
+Layout dispatch: the Pallas kernel walks halo-inclusive tiles, which
+needs per-axis storage (AoS or SoA).  An AoSoA input is relayouted to the
+kernel's preferred layout on the way in and back on the way out — the
+same boundary conversion the executor's layout solver emits, so results
+are numerically identical under all three layouts.
+"""
 
 from functools import partial
 
 import jax
 
-from .kernel import flux_difference_pallas
+from repro.core.layout import dispatch_with_relayout
+from .kernel import (PREFERRED_LAYOUT, SUPPORTED_LAYOUTS,
+                     flux_difference_pallas)
 from .ref import flux_difference_ref
 
 
 @partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
 def flux_difference(state_haloed, lam_x, lam_y, *, block=(8, 128),
                     use_pallas: bool = True, interpret: bool = True):
-    if use_pallas:
-        return flux_difference_pallas(state_haloed, lam_x, lam_y, block=block,
-                                      interpret=interpret)
-    return flux_difference_ref(state_haloed, lam_x, lam_y)
+    if not use_pallas:
+        return flux_difference_ref(state_haloed, lam_x, lam_y)
+    return dispatch_with_relayout(
+        flux_difference_pallas, state_haloed, lam_x, lam_y,
+        supported=SUPPORTED_LAYOUTS, preferred=PREFERRED_LAYOUT,
+        block=block, interpret=interpret)

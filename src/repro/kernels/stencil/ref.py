@@ -9,13 +9,5 @@ def flux_difference_ref(
 ) -> RecordArray:
     U = euler.stack_state(state_haloed)
     out = euler.flux_difference(U, lam_x, lam_y)
-    like = RecordArray(
-        state_haloed.data, state_haloed.spec, state_haloed.layout
-    )
-    # build an un-haloed record with the same layout
-    import jax.numpy as jnp
-
-    from repro.core.layout import Layout
-
-    data = out if state_haloed.layout is Layout.SOA else jnp.moveaxis(out, 0, -1)
-    return RecordArray(data, state_haloed.spec, state_haloed.layout)
+    # un-haloed record in the same layout as the input (layout-generic)
+    return euler.unstack_state(out, state_haloed)

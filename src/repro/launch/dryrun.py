@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
-from repro.analysis import analyze_hlo
+from repro.analysis import analyze_hlo, normalize_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch import steps as S
 from repro.models.config import SHAPES, shapes_for
@@ -121,7 +121,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t1
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     t2 = time.time()
     loopaware = analyze_hlo(compiled.as_text())
     t_analyze = time.time() - t2

@@ -14,20 +14,19 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh_auto
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_mesh(shape, axes):
-    """Small-mesh helper (tests / examples) with Auto axis types."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axes)))
+    """Small-mesh helper (tests / examples) with Auto axis types
+    (version-guarded: older JAX lacks ``axis_types``)."""
+    return make_mesh_auto(shape, axes)
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -52,6 +52,10 @@ def kv_make(batch: int, seq: int, kv_heads: int, head_dim: int,
     batch; "bhs" puts sequence minor-most-but-one so the decode score dot
     consumes k as (B, H, S, hd) with NO per-step transpose (measured:
     -47%% decode HBM traffic on qwen3 decode_32k; EXPERIMENTS §Perf)."""
+    if layout is Layout.AOSOA:
+        raise ValueError(
+            "kvcache supports AOS/SOA only: every accessor writes "
+            "dynamic slices along the sequence axis, which AOSOA tiles")
     shape = RecordArray.storage_shape(kv_spec(head_dim),
                                       _space(batch, seq, kv_heads, order),
                                       layout)

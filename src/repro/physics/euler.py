@@ -23,19 +23,25 @@ RHO, EN, MX, MY = 0, 1, 2, 3
 
 
 def stack_state(state: RecordArray) -> jax.Array:
-    """(4, *space) component-major view of an Euler state record."""
-    from repro.core.layout import Layout
+    """(4, *space) component-major view of an Euler state record
+    (layout-generic: AoS/SoA are views, AoSoA relayouts)."""
+    from repro.core.layout import Layout, relayout
 
     if state.layout is Layout.SOA:
         return state.data  # already (4, *space)
-    return jnp.moveaxis(state.data, -1, 0)
+    if state.layout is Layout.AOS:
+        return jnp.moveaxis(state.data, -1, 0)
+    return relayout(state, Layout.SOA).data
 
 
 def unstack_state(U: jax.Array, like: RecordArray) -> RecordArray:
-    from repro.core.layout import Layout
+    from repro.core.layout import Layout, relayout
 
-    data = U if like.layout is Layout.SOA else jnp.moveaxis(U, 0, -1)
-    return RecordArray(data, like.spec, like.layout)
+    if like.layout is Layout.SOA:
+        return RecordArray(U, like.spec, Layout.SOA)
+    if like.layout is Layout.AOS:
+        return RecordArray(jnp.moveaxis(U, 0, -1), like.spec, Layout.AOS)
+    return relayout(RecordArray(U, like.spec, Layout.SOA), like.layout)
 
 
 def pressure(U: jax.Array) -> jax.Array:

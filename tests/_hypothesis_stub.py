@@ -1,0 +1,117 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The real dependency is declared in requirements-dev.txt; this fallback
+keeps test *collection* from hard-erroring on bare containers and runs
+each ``@given`` test over a deterministic pseudo-random sample of the
+strategy space (seeded per test name, so failures reproduce).
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``floats``, ``sampled_from``, ``lists``, ``text``.  Shrinking, the
+database, and ``@example`` are out of scope — install hypothesis for the
+real thing.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+__version__ = "0.0-stub"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=10):
+    alphabet = list(alphabet)
+
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return "".join(alphabet[rng.randrange(len(alphabet))]
+                       for _ in range(n))
+
+    return _Strategy(draw)
+
+
+def lists(elements, min_size=0, max_size=10, unique=False):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        if not unique:
+            return [elements.example(rng) for _ in range(n)]
+        out, tries = [], 0
+        while len(out) < n and tries < 1000:
+            v = elements.example(rng)
+            tries += 1
+            if v not in out:
+                out.append(v)
+        return out
+
+    return _Strategy(draw)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            # @settings may be stacked on top of @given: read from wrapper
+            n = getattr(wrapper, "_stub_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                fn(*args, **kw, **drawn)
+
+        # hide the strategy params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` in ``sys.modules``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.__version__ = __version__
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists", "text"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

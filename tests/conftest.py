@@ -13,6 +13,16 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# hypothesis is a dev dependency (requirements-dev.txt); on bare containers
+# fall back to the deterministic stub so collection never hard-errors
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+
 
 @pytest.fixture(scope="session")
 def rng():

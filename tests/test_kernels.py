@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Boundary, Layout, RecordArray, pad_boundary_only
+from repro.core import (Boundary, Layout, RecordArray, pad_boundary_only,
+                        relayout)
 
 
 # -- saxpy --------------------------------------------------------------------
@@ -31,8 +32,26 @@ def test_saxpy_sweep(rng, n, dtype, bounds_check):
 
 # -- particle -----------------------------------------------------------------
 
+@pytest.mark.parametrize("n", [128, 1024, 4096])
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA, Layout.AOSOA])
+def test_saxpy_record_sweep(rng, n, layout):
+    from repro.kernels.saxpy.kernel import SAXPY_SPEC
+    from repro.kernels.saxpy.ops import saxpy_record
+    from repro.kernels.saxpy.ref import saxpy_record_ref
+    rec = RecordArray.from_fields(
+        SAXPY_SPEC,
+        {"x": jnp.asarray(rng.standard_normal(n), jnp.float32),
+         "y": jnp.asarray(rng.standard_normal(n), jnp.float32)},
+        layout)
+    out = saxpy_record(rec, 2.5, block=min(n, 1024))
+    ref = saxpy_record_ref(rec, 2.5)
+    assert out.layout is layout
+    np.testing.assert_allclose(np.asarray(out.data), np.asarray(ref.data),
+                               rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("n,block", [(256, 128), (1024, 512), (1024, 256)])
-@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA, Layout.AOSOA])
 def test_particle_sweep(rng, n, block, layout):
     from repro.kernels.particle.ops import (PARTICLE_SPEC, particle_update,
                                             particle_update_ref)
@@ -50,7 +69,7 @@ def test_particle_sweep(rng, n, block, layout):
 # -- stencil (FORCE flux) ------------------------------------------------------
 
 @pytest.mark.parametrize("shape", [(32, 16), (64, 64)])
-@pytest.mark.parametrize("layout", [Layout.SOA])
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA, Layout.AOSOA])
 def test_flux_sweep(shape, layout):
     from repro.kernels.stencil.ops import flux_difference, flux_difference_ref
     from repro.physics.euler import EULER_SPEC, shock_bubble_init
@@ -59,7 +78,7 @@ def test_flux_sweep(shape, layout):
     for ax in (1, 2):
         d = pad_boundary_only(d, axis=ax, width=1,
                               boundary=Boundary.TRANSMISSIVE)
-    hal = RecordArray(d, EULER_SPEC, layout)
+    hal = relayout(RecordArray(d, EULER_SPEC, Layout.SOA), layout)
     out = flux_difference(hal, 0.1, 0.1)
     ref = flux_difference_ref(hal, 0.1, 0.1)
     o = out.data if isinstance(out, RecordArray) else out

@@ -65,3 +65,10 @@ def test_registry_aliases():
         C.get("not-a-model")
     for a in C.ARCH_IDS:
         assert C.get(a).name == a
+
+
+def test_aosoa_rejected():
+    """kvcache accessors dynamic-slice the sequence axis, which AOSOA
+    tiles — constructing such a cache must fail loudly, not later."""
+    with pytest.raises(ValueError, match="AOS/SOA only"):
+        kvc.kv_make(B, S, H, D, layout=Layout.AOSOA)

@@ -6,9 +6,11 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import Field, Layout, RecordArray, RecordSpec, Vector
+from repro.core import (Field, Layout, RecordArray, RecordSpec, Vector,
+                        aosoa_tile, block_spec_for, relayout)
 
 SPEC = RecordSpec.create("rho", "E", Vector("mom", 2))
+ALL_LAYOUTS = [Layout.AOS, Layout.SOA, Layout.AOSOA]
 
 
 def _random_fields(rng, space):
@@ -18,14 +20,25 @@ def _random_fields(rng, space):
                 rng.standard_normal((*space, 2), dtype=np.float32))}
 
 
-@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
 def test_storage_shapes(layout):
     space = (6, 5)
     shape = RecordArray.storage_shape(SPEC, space, layout)
-    assert shape == ((6, 5, 4) if layout is Layout.AOS else (4, 6, 5))
+    expect = {Layout.AOS: (6, 5, 4), Layout.SOA: (4, 6, 5),
+              # tile = gcd(5, 128) = 1 -> (6, 5 tiles, 4 comps, 1 lane)
+              Layout.AOSOA: (6, 5, 4, 1)}[layout]
+    assert shape == expect
 
 
-@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+def test_aosoa_tile_is_lane_aligned_and_exact():
+    assert aosoa_tile(1024) == 128
+    assert aosoa_tile(192) == 64
+    assert aosoa_tile(7) == 1    # degenerate but exact
+    shape = RecordArray.storage_shape(SPEC, (2, 256), Layout.AOSOA)
+    assert shape == (2, 2, 4, 128)
+
+
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
 def test_field_roundtrip(rng, layout):
     space = (4, 3)
     fields = _random_fields(rng, space)
@@ -48,7 +61,23 @@ def test_layout_interop_zero_cost_semantics(rng):
                                       np.asarray(s.field(name)))
 
 
-@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+@pytest.mark.parametrize("src", ALL_LAYOUTS)
+@pytest.mark.parametrize("dst", ALL_LAYOUTS)
+def test_relayout_all_pairs_roundtrip(rng, src, dst):
+    """relayout is value-exact for every ordered layout pair, and the
+    round trip restores the original storage bit-for-bit."""
+    fields = _random_fields(rng, (3, 8))
+    a = RecordArray.from_fields(SPEC, fields, src)
+    b = relayout(a, dst)
+    assert b.layout is dst and b.space == a.space
+    for name in SPEC.names:
+        np.testing.assert_array_equal(np.asarray(b.field(name)),
+                                      np.asarray(a.field(name)))
+    back = relayout(b, src)
+    np.testing.assert_array_equal(np.asarray(back.data), np.asarray(a.data))
+
+
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
 def test_set_field(rng, layout):
     rec = RecordArray.create(SPEC, (5, 4), layout)
     v = jnp.asarray(rng.standard_normal((5, 4), dtype=np.float32))
@@ -81,6 +110,38 @@ def test_spec_validation():
         SPEC.offset("nope")
 
 
+@pytest.mark.parametrize("layout", ALL_LAYOUTS)
+def test_block_spec_for_drives_a_kernel(rng, layout):
+    """Pin the block_spec_for contract for every layout with a real
+    pallas_call: a whole-record copy through the generated BlockSpec.
+    For AOSOA the last space_block entry is the storage tile extent and
+    the index map's last output addresses tile-count units."""
+    from jax.experimental import pallas as pl
+
+    n = 256
+    rec = RecordArray.from_fields(
+        SPEC,
+        {"rho": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+         "E": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+         "mom": jnp.asarray(rng.standard_normal((n, 2), dtype=np.float32))},
+        layout)
+    if layout is Layout.AOSOA:
+        tile = aosoa_tile(n)
+        grid = (n // tile,)
+        bspec = block_spec_for(SPEC, layout, (tile,), lambda i: (i,))
+    else:
+        block = 64
+        grid = (n // block,)
+        bspec = block_spec_for(SPEC, layout, (block,), lambda i: (i,))
+
+    out = pl.pallas_call(
+        lambda i_ref, o_ref: o_ref.__setitem__(..., i_ref[...]),
+        out_shape=jax.ShapeDtypeStruct(rec.data.shape, rec.dtype),
+        grid=grid, in_specs=[bspec], out_specs=bspec, interpret=True,
+    )(rec.data)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(rec.data))
+
+
 # -- hypothesis properties ---------------------------------------------------
 
 field_names = st.lists(
@@ -101,21 +162,46 @@ def test_prop_layout_conversion_preserves_fields(names, sizes, nx, ny, seed):
         rng.standard_normal((nx, ny, f.size) if f.size > 1 else (nx, ny),
                             dtype=np.float32))
         for f in spec.fields}
-    for lay in (Layout.AOS, Layout.SOA):
+    for lay in (Layout.AOS, Layout.SOA, Layout.AOSOA):
         rec = RecordArray.from_fields(spec, fields, lay)
-        other = rec.with_layout(
-            Layout.SOA if lay is Layout.AOS else Layout.AOS)
-        for f in spec.fields:
-            a = np.asarray(rec.field(f.name))
-            b = np.asarray(other.field(f.name))
-            expect = np.asarray(fields[f.name])
-            np.testing.assert_array_equal(a, expect)
-            np.testing.assert_array_equal(b, expect)
+        for other_lay in (Layout.AOS, Layout.SOA, Layout.AOSOA):
+            other = rec.with_layout(other_lay)
+            for f in spec.fields:
+                a = np.asarray(rec.field(f.name))
+                b = np.asarray(other.field(f.name))
+                expect = np.asarray(fields[f.name])
+                np.testing.assert_array_equal(a, expect)
+                np.testing.assert_array_equal(b, expect)
+
+
+@settings(max_examples=25, deadline=None)
+@given(names=field_names,
+       sizes=st.lists(st.integers(1, 3), min_size=4, max_size=4),
+       nx=st.integers(1, 4), ny=st.integers(1, 300),
+       seed=st.integers(0, 2**31 - 1))
+def test_prop_relayout_roundtrip_arbitrary_specs(names, sizes, nx, ny, seed):
+    """AoS <-> SoA <-> AoSoA chain preserves every field for arbitrary
+    specs and shapes (the tiled dim hits aligned and degenerate tiles)."""
+    spec = RecordSpec.create(*[(n, s) for n, s in zip(names, sizes)])
+    rng = np.random.default_rng(seed)
+    fields = {f.name: jnp.asarray(
+        rng.standard_normal((nx, ny, f.size) if f.size > 1 else (nx, ny),
+                            dtype=np.float32))
+        for f in spec.fields}
+    rec = RecordArray.from_fields(spec, fields, Layout.AOS)
+    chain = relayout(relayout(relayout(rec, Layout.AOSOA), Layout.SOA),
+                     Layout.AOS)
+    np.testing.assert_array_equal(np.asarray(chain.data),
+                                  np.asarray(rec.data))
+    for f in spec.fields:
+        np.testing.assert_array_equal(
+            np.asarray(relayout(rec, Layout.AOSOA).field(f.name)),
+            np.asarray(fields[f.name]))
 
 
 @settings(max_examples=25, deadline=None)
 @given(n=st.integers(1, 5), seed=st.integers(0, 2**31 - 1),
-       layout=st.sampled_from([Layout.AOS, Layout.SOA]))
+       layout=st.sampled_from([Layout.AOS, Layout.SOA, Layout.AOSOA]))
 def test_prop_set_then_get(n, seed, layout):
     rng = np.random.default_rng(seed)
     rec = RecordArray.create(SPEC, (n, n), layout)

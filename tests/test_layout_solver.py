@@ -1,0 +1,258 @@
+"""Layout solver (core/executor.py): per-segment layout choice, user pins,
+kernel hints, and relayout insertion at segment boundaries."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Boundary, DistTensor, Executor, Graph, Layout,
+                        RecordArray, RecordSpec, Vector,
+                        concurrent_padded_access, pad_boundary_only,
+                        preferred_layout, relayout)
+
+SPEC = RecordSpec.create(Vector("x", 3), Vector("v", 3))
+
+
+def _bump(r):
+    return r.set_field("x", r.field("x") + 1.0)
+
+
+def _tensor(**kw):
+    return DistTensor("p", (256,), spec=SPEC, **kw)
+
+
+# -- choice rules -------------------------------------------------------------
+
+def test_solver_defaults_to_declared_layout():
+    t = _tensor(layout=Layout.AOS)
+    g = Graph()
+    g.split(_bump, t, writes=(0,))
+    ex = Executor(g)
+    assert ex.plan.per_segment[0]["p"] is Layout.AOS
+    assert ex.plan.relayouts == []
+
+
+def test_solver_honors_node_hint():
+    t = _tensor(layout=Layout.SOA)
+    g = Graph()
+    g.split(_bump, preferred_layout(t, Layout.AOSOA), writes=(0,))
+    ex = Executor(g)
+    assert ex.plan.per_segment[0]["p"] is Layout.AOSOA
+    st = ex.init_state()
+    assert st["p"].shape == (2, 6, 128)  # materialized directly in AoSoA
+
+
+def test_solver_layout_kwarg_on_split():
+    t = _tensor(layout=Layout.SOA)
+    g = Graph()
+    g.split(_bump, t, writes=(0,), layout=Layout.AOS)
+    ex = Executor(g)
+    assert ex.plan.per_segment[0]["p"] is Layout.AOS
+
+
+def test_user_pin_overrides_hint():
+    t = _tensor(layout=Layout.SOA, pin_layout=True)
+    g = Graph()
+    g.split(_bump, preferred_layout(t, Layout.AOS), writes=(0,))
+    ex = Executor(g)
+    assert ex.plan.per_segment[0]["p"] is Layout.SOA
+
+
+def test_infeasible_aosoa_pin_raises_at_construction():
+    """layout.py's promise: a pin that forces an infeasible AoSoA raises
+    at validation time — with or without a mesh."""
+    t = _tensor(layout=Layout.AOSOA, pin_layout=True, halo=(1,))
+    out = DistTensor("q", (256,), spec=SPEC)
+    g = Graph()
+    g.split(lambda a, b: b, concurrent_padded_access(t), out)
+    with pytest.raises(ValueError, match="pinned AOSOA"):
+        Executor(g)
+
+
+def test_aosoa_hint_clamped_by_last_dim_halo():
+    """A halo on the tiled dim is infeasible under AoSoA: clamp to SoA."""
+    t = _tensor(layout=Layout.SOA, halo=(1,))
+    out = DistTensor("q", (256,), spec=SPEC)
+    g = Graph()
+    g.split(lambda a, b: b, preferred_layout(
+        concurrent_padded_access(t), Layout.AOSOA), out)
+    ex = Executor(g)
+    assert ex.plan.per_segment[0]["p"] is Layout.SOA
+
+
+# -- relayout insertion -------------------------------------------------------
+
+def test_relayout_inserted_exactly_on_disagreement():
+    t = _tensor(layout=Layout.SOA)
+    g = Graph()
+    g.split(_bump, preferred_layout(t, Layout.AOS), writes=(0,))
+    g.sync()
+    g.split(_bump, preferred_layout(t, Layout.AOSOA), writes=(0,))
+    ex = Executor(g)
+    assert len(ex.plan.relayouts) == 1
+    step = ex.plan.relayouts[0]
+    assert (step.tensor, step.src, step.dst) == ("p", Layout.AOS,
+                                                 Layout.AOSOA)
+    # values flow through the boundary conversion; outside the call the
+    # state is restored to the plan's initial layout (AoS here), keeping
+    # state dicts interchangeable between calls
+    st = ex.init_state()
+    assert st["p"].shape == (256, 6)          # first consumer: AoS
+    st = ex(st)
+    assert st["p"].shape == (256, 6)          # restored on exit
+    rec = ex.read(st, t)
+    np.testing.assert_allclose(np.asarray(rec.field("x")), 2.0)
+
+
+def test_state_dicts_interchangeable_across_reinit():
+    """Regression: the executor must not misread a state produced before
+    a second init_state() — physical layout is a property of the state's
+    position in the plan, which is always 'initial' outside a call."""
+    t = _tensor(layout=Layout.SOA)
+    g = Graph()
+    g.split(_bump, preferred_layout(t, Layout.AOS), writes=(0,))
+    g.sync()
+    g.split(_bump, preferred_layout(t, Layout.AOSOA), writes=(0,))
+    ex = Executor(g)
+    st_a = ex.init_state()
+    st_a = ex(st_a)
+    st_b = ex.init_state()          # resets nothing that st_a depends on
+    st_a = ex(st_a)                 # +2 again on the old state
+    st_b = ex(st_b)
+    np.testing.assert_allclose(np.asarray(ex.read(st_a, t).field("x")), 4.0)
+    np.testing.assert_allclose(np.asarray(ex.read(st_b, t).field("x")), 2.0)
+
+
+def test_raw_override_reingests_executor_state():
+    """Regression: init_state(p=<raw array from a previous run>) must
+    recognize the solver's (initial) layout by storage shape, not blindly
+    assume the declared layout."""
+    t = _tensor(layout=Layout.SOA)  # declared SoA, solver will pick AoSoA
+    g = Graph()
+    g.split(_bump, preferred_layout(t, Layout.AOSOA), writes=(0,))
+    ex = Executor(g)
+    st = ex(ex.init_state())
+    assert st["p"].shape == (2, 6, 128)       # AoSoA outside the call
+    st2 = ex(ex.init_state(p=st["p"]))        # raw re-ingestion
+    np.testing.assert_allclose(np.asarray(ex.read(st2, t).field("x")), 2.0)
+    # an unrecognizable shape is rejected, not silently reinterpreted
+    with pytest.raises(ValueError, match="matches no layout"):
+        ex.init_state(p=jnp.zeros((7, 7)))
+
+
+def test_raw_override_ambiguous_shape_rejected():
+    """space (6,) with 6 components: AoS and SoA storage are both (6, 6)
+    — guessing could scramble data, so a RecordArray is required."""
+    spec = RecordSpec.create(Vector("a", 6))
+    t = DistTensor("p", (6,), spec=spec, layout=Layout.SOA)
+    g = Graph()
+    g.split(_bump_a, preferred_layout(t, Layout.AOS), writes=(0,))
+    ex = Executor(g)
+    with pytest.raises(ValueError, match="ambiguous"):
+        ex.init_state(p=jnp.zeros((6, 6)))
+
+
+def _bump_a(r):
+    return r.set_field("a", r.field("a") + 1.0)
+
+
+def test_aosoa_vetoed_by_haloed_access_handle():
+    """Halo widths are access-level: a haloed access on one handle must
+    veto AoSoA for the shared storage even if another same-name handle
+    (which wins the all_tensors dedup) carries no halo."""
+    haloed = _tensor(layout=Layout.SOA, halo=(1,))
+    plain = _tensor(layout=Layout.SOA)           # same name, no halo
+    out = DistTensor("q", (256,), spec=SPEC)
+    g = Graph()
+    g.split(lambda a, b: b, preferred_layout(
+        concurrent_padded_access(haloed), Layout.AOSOA), out)
+    g.split(_bump, plain, writes=(0,))           # dedup keeps this handle
+    ex = Executor(g)
+    assert ex.plan.per_segment[0]["p"] is Layout.SOA
+    ex(ex.init_state())                          # and it actually runs
+
+
+def test_no_relayout_when_segments_agree():
+    t = _tensor(layout=Layout.SOA)
+    g = Graph()
+    g.split(_bump, preferred_layout(t, Layout.AOS), writes=(0,))
+    g.sync()
+    g.split(_bump, preferred_layout(t, Layout.AOS), writes=(0,))
+    ex = Executor(g)
+    assert ex.plan.relayouts == []
+    st = ex(ex.init_state())
+    np.testing.assert_allclose(np.asarray(ex.read(st, t).field("x")), 2.0)
+
+
+@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA, Layout.AOSOA])
+def test_executor_results_identical_under_pinned_layouts(rng, layout):
+    """The same graph produces the same numbers whatever layout the user
+    pins — the executor's end of the paper's polymorphism claim."""
+    t = _tensor(layout=layout, pin_layout=True)
+    x0 = jnp.asarray(rng.standard_normal((256, 3), dtype=np.float32))
+    v0 = jnp.asarray(rng.standard_normal((256, 3), dtype=np.float32))
+
+    def step(r):
+        return r.set_field("x", r.field("x") + 0.5 * r.field("v"))
+
+    g = Graph()
+    g.split(step, t, writes=(0,))
+    ex = Executor(g)
+    assert ex.plan.per_segment[0]["p"] is layout
+    init = RecordArray.from_fields(SPEC, {"x": x0, "v": v0}, layout)
+    st = ex(ex.init_state(p=init))
+    got = np.asarray(ex.read(st, t).field("x"))
+    np.testing.assert_allclose(got, np.asarray(x0 + 0.5 * v0), rtol=1e-6,
+                               atol=1e-6)
+
+
+# -- acceptance: kernels identical under all three layouts --------------------
+
+LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
+
+
+def _assert_layouts_agree(outs, tol=0.0):
+    base = outs[Layout.SOA]
+    for lay, got in outs.items():
+        if tol:
+            np.testing.assert_allclose(got, base, rtol=tol, atol=tol,
+                                       err_msg=str(lay))
+        else:
+            np.testing.assert_array_equal(got, base, err_msg=str(lay))
+
+
+def test_saxpy_record_identical_under_all_layouts(rng):
+    from repro.kernels.saxpy.kernel import SAXPY_SPEC
+    from repro.kernels.saxpy.ops import saxpy_record
+    fields = {"x": jnp.asarray(rng.standard_normal(2048, dtype=np.float32)),
+              "y": jnp.asarray(rng.standard_normal(2048, dtype=np.float32))}
+    outs = {lay: np.asarray(saxpy_record(
+        RecordArray.from_fields(SAXPY_SPEC, fields, lay), 2.5).field("y"))
+        for lay in LAYOUTS}
+    _assert_layouts_agree(outs)
+
+
+def test_particle_identical_under_all_layouts(rng):
+    from repro.kernels.particle.ops import PARTICLE_SPEC, particle_update
+    fields = {
+        "x": jnp.asarray(rng.standard_normal((1024, 3), dtype=np.float32)),
+        "v": jnp.asarray(rng.standard_normal((1024, 3), dtype=np.float32))}
+    outs = {lay: np.asarray(particle_update(
+        RecordArray.from_fields(PARTICLE_SPEC, fields, lay), 0.25).field("x"))
+        for lay in LAYOUTS}
+    _assert_layouts_agree(outs)
+
+
+def test_flux_identical_under_all_layouts():
+    from repro.kernels.stencil.ops import flux_difference
+    from repro.physics.euler import EULER_SPEC, shock_bubble_init
+    d = shock_bubble_init(32, 16)
+    for ax in (1, 2):
+        d = pad_boundary_only(d, axis=ax, width=1,
+                              boundary=Boundary.TRANSMISSIVE)
+    soa = RecordArray(d, EULER_SPEC, Layout.SOA)
+    outs = {}
+    for lay in LAYOUTS:
+        out = flux_difference(relayout(soa, lay), 0.1, 0.1)
+        outs[lay] = np.asarray(out.field("rho"))
+    _assert_layouts_agree(outs, tol=1e-5)

@@ -37,3 +37,7 @@ class Csv:
                      for v in vals)
         self.rows.append(vals)
         print(",".join(vals), flush=True)
+
+    def dicts(self) -> list[dict]:
+        """Rows as JSON-ready records (``benchmarks.run --json``)."""
+        return [dict(zip(self.cols, r)) for r in self.rows]

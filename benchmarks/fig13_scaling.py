@@ -17,12 +17,14 @@ from .common import Csv
 
 _CHILD = r"""
 import os, sys, json, time
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
 import jax, jax.numpy as jnp, numpy as np
 from repro.analysis import analyze_hlo
 from repro.core import (Boundary, DistTensor, Executor, Graph, Layout,
                         RecordArray, concurrent_padded_access, make_mesh)
-from repro.physics.euler import EULER_SPEC, shock_bubble_init, update_dim
+from repro.physics.euler import (EULER_SPEC, shock_bubble_init, update_dim,
+                                 update_full)
 
 def build(nx, ny, n_dev, steps):
     mesh = make_mesh((n_dev,), ("gy",))
@@ -42,6 +44,31 @@ def build(nx, ny, n_dev, steps):
     ex = Executor(g, mesh=mesh)
     return ex
 
+def build2d(nx, ny, px, py, overlap):
+    # 2-D decomposition, one unsplit 2-D-stencil node: the halo schedule
+    # spans both mesh axes (edge strips + corner blocks)
+    mesh = make_mesh((px, py), ("gx", "gy"))
+    u = DistTensor("u", (nx, ny), spec=EULER_SPEC, layout=Layout.SOA,
+                   partition=("gx", "gy"), halo=(1, 1),
+                   boundary=Boundary.TRANSMISSIVE)
+    lam = 1e-3
+    g = Graph()
+    g.split(lambda rec: RecordArray(update_full(rec.data, lam, lam),
+                                    EULER_SPEC, Layout.SOA),
+            concurrent_padded_access(u), writes=(0,), overlap=overlap)
+    return Executor(g, mesh=mesh)
+
+def measure(ex, state, reps=5):
+    state = ex(state)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state = ex(state)
+    jax.block_until_ready(jax.tree.leaves(state))
+    dt = (time.perf_counter() - t0) / reps * 1e3
+    txt = ex._jitted[0].lower(state).compile().as_text()
+    a = analyze_hlo(txt)
+    return state, dt, a
+
 out = []
 base = 128
 for mode in ("weak", "strong"):
@@ -52,30 +79,38 @@ for mode in ("weak", "strong"):
             nx, ny = base, base * 8       # fixed global problem
         ex = build(nx, ny, n_dev, 1)
         state = ex.init_state(u=shock_bubble_init(nx, ny))
-        # one warm step, then timed steps
-        state = ex(state)
-        t0 = time.perf_counter()
-        for _ in range(5):
-            state = ex(state)
-        jax.block_until_ready(jax.tree.leaves(state))
-        dt = (time.perf_counter() - t0) / 5 * 1e3
-        # structural: collective bytes per device from the compiled segment
-        fn = ex._jitted[0]
-        txt = fn.lower(state).compile().as_text()
-        a = analyze_hlo(txt)
+        state, dt, a = measure(ex, state)
         out.append(dict(mode=mode, n_dev=n_dev, nx=nx, ny=ny,
                         ms_per_step=dt,
                         halo_bytes_per_dev=a["collective_link_bytes"],
                         hlo_bytes_per_dev=a["bytes"]))
+
+# 2-D mesh: overlapped vs synchronous halo scheduling on the same problem
+nx = ny = 2 * base
+ref = None
+for overlap in (False, True):
+    ex = build2d(nx, ny, 2, 4, overlap)
+    state = ex.init_state(u=shock_bubble_init(nx, ny))
+    state, dt, a = measure(ex, state)
+    u_out = np.asarray(state["u"])
+    if ref is None:
+        ref = u_out
+    else:
+        np.testing.assert_allclose(u_out, ref, rtol=1e-5, atol=1e-6)
+    out.append(dict(mode="2d-overlap" if overlap else "2d-sync",
+                    n_dev=8, nx=nx, ny=ny, ms_per_step=dt,
+                    halo_bytes_per_dev=a["collective_link_bytes"],
+                    hlo_bytes_per_dev=a["bytes"]))
 print("JSON" + json.dumps(out))
 """
 
 
-def main() -> None:
+def main() -> list[dict]:
     env = dict(os.environ)
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
     res = subprocess.run([sys.executable, "-c", _CHILD], env=env,
                          capture_output=True, text=True, timeout=1800)
     if res.returncode != 0:
@@ -90,6 +125,7 @@ def main() -> None:
         csv.row(r["mode"], r["n_dev"], f"{r['nx']}x{r['ny']}",
                 r["ms_per_step"], int(r["halo_bytes_per_dev"]),
                 int(r["hlo_bytes_per_dev"]), frac)
+    return csv.dicts()
 
 
 if __name__ == "__main__":

@@ -1,10 +1,16 @@
 """Run every paper-table benchmark (small default sizes; CPU-feasible).
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--json PATH]
+
+``--json`` writes machine-readable per-suite results (wall seconds,
+status, and each suite's CSV rows) so benchmark trajectories can be
+tracked across commits instead of scraping stdout.
 """
 
 import argparse
+import json
 import sys
+import time
 import traceback
 
 
@@ -12,6 +18,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write per-suite timings/rows as JSON")
     args = ap.parse_args(argv)
 
     from . import (fig13_scaling, table2_saxpy, table3_particle, table4_flux,
@@ -32,17 +40,34 @@ def main(argv=None) -> int:
             else ((1024, 1024), (2048, 2048)))),
         ("Table 5 (eikonal FIM)", lambda: table5_eikonal.main(
             sizes=(128,) if not args.full else (1024, 2048))),
-        ("Fig 13 (Euler scaling)", fig13_scaling.main),
+        ("Fig 13 (Euler scaling + 2D overlap)", fig13_scaling.main),
     ]
     failed = 0
+    results = []
     for name, fn in jobs:
         print(f"\n=== {name} ===")
+        t0 = time.perf_counter()
+        rows, err = None, None
         try:
-            fn()
+            rows = fn()
         except Exception:
             failed += 1
+            err = traceback.format_exc()
             traceback.print_exc()
+        results.append({
+            "suite": name,
+            "ok": err is None,
+            "seconds": round(time.perf_counter() - t0, 3),
+            "rows": rows if isinstance(rows, (list, dict)) else None,
+            "error": err,
+        })
     print(f"\n[benchmarks] {len(jobs) - failed}/{len(jobs)} suites OK")
+    if args.json:
+        payload = {"full": args.full, "unix_time": time.time(),
+                   "suites": results}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[benchmarks] wrote {args.json}")
     return 1 if failed else 0
 
 

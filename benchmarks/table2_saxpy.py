@@ -13,7 +13,7 @@ from repro.kernels.saxpy.ops import saxpy
 from .common import Csv, time_fn
 
 
-def main(sizes=(1 << 20, 4 << 20, 16 << 20)) -> None:
+def main(sizes=(1 << 20, 4 << 20, 16 << 20)) -> list[dict]:
     csv = Csv("size", "ref_ms", "pallas_checked_ms", "pallas_nbc_ms",
               "check_overhead_pct")
     rng = np.random.default_rng(0)
@@ -25,6 +25,7 @@ def main(sizes=(1 << 20, 4 << 20, 16 << 20)) -> None:
         t_nbc = time_fn(saxpy, 2.0, x, y, bounds_check=False)
         over = (t_chk - t_nbc) / max(t_nbc, 1e-9) * 100
         csv.row(n, t_ref, t_chk, t_nbc, over)
+    return csv.dicts()
 
 
 if __name__ == "__main__":

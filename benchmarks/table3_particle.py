@@ -16,7 +16,7 @@ from repro.kernels.particle.ops import PARTICLE_SPEC, particle_update
 from .common import Csv, time_fn
 
 
-def main(sizes=(100_000, 1_000_000)) -> None:
+def main(sizes=(100_000, 1_000_000)) -> list[dict]:
     csv = Csv("size", "layout", "cpu_ms", "hlo_bytes", "hlo_flops")
     rng = np.random.default_rng(0)
     for n in sizes:
@@ -32,6 +32,7 @@ def main(sizes=(100_000, 1_000_000)) -> None:
             ).lower(rec).compile()
             a = analyze_hlo(comp.as_text())
             csv.row(n, layout.name, t, int(a["bytes"]), int(a["flops"]))
+    return csv.dicts()
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ def _haloed(nx, ny, layout):
     return rec if layout is Layout.SOA else rec.with_layout(Layout.AOS)
 
 
-def main(sizes=((256, 256), (512, 512))) -> None:
+def main(sizes=((256, 256), (512, 512))) -> list[dict]:
     csv = Csv("size", "layout", "pallas_cpu_ms", "jnp_cpu_ms", "hlo_bytes",
               "hlo_flops")
     for nx, ny in sizes:
@@ -39,6 +39,7 @@ def main(sizes=((256, 256), (512, 512))) -> None:
             a = analyze_hlo(comp.as_text())
             csv.row(f"{nx}x{ny}", layout.name, tp, tj, int(a["bytes"]),
                     int(a["flops"]))
+    return csv.dicts()
 
 
 if __name__ == "__main__":

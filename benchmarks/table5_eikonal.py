@@ -13,7 +13,7 @@ from repro.kernels.eikonal.ops import eikonal_fim_sweep
 from .common import Csv, time_fn
 
 
-def main(sizes=(256, 512), inners=(2, 4, 8)) -> None:
+def main(sizes=(256, 512), inners=(2, 4, 8)) -> list[dict]:
     csv = Csv("size", "inner_sweeps", "cpu_ms")
     for n in sizes:
         phi = jnp.full((n, n), 1e3, jnp.float32)
@@ -25,6 +25,7 @@ def main(sizes=(256, 512), inners=(2, 4, 8)) -> None:
             t = time_fn(eikonal_fim_sweep, ph, src, 1.0 / n, inner=inner,
                         iters=3)
             csv.row(n, inner, t)
+    return csv.dicts()
 
 
 if __name__ == "__main__":

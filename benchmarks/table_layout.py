@@ -37,7 +37,7 @@ def _bench_kernel(csv, kernel_name, n_label, make_rec, run):
             times[Layout.AOS] / max(times[Layout.SOA], 1e-9), t_relayout)
 
 
-def main(saxpy_n=1 << 18, particle_n=65_536, flux_shape=(128, 128)) -> None:
+def main(saxpy_n=1 << 18, particle_n=65_536, flux_shape=(128, 128)) -> list[dict]:
     csv = Csv("kernel", "size", "aos_ms", "soa_ms", "aosoa_ms",
               "aos_over_soa", "relayout_ms")
     rng = np.random.default_rng(0)
@@ -85,6 +85,7 @@ def main(saxpy_n=1 << 18, particle_n=65_536, flux_shape=(128, 128)) -> None:
 
     _bench_kernel(csv, "flux", f"{flux_shape[0]}x{flux_shape[1]}", make_flux,
                   lambda r: flux_difference(r, 0.1, 0.1))
+    return csv.dicts()
 
 
 if __name__ == "__main__":

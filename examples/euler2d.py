@@ -3,9 +3,15 @@ the Ripple graph API exactly as paper Listing 12: per-step wavespeed
 field -> max-reduction -> CFL dt -> dimension-split FORCE updates with
 halo exchange — ONE graph, built once, executed many times.
 
+``--px`` splits the mesh over BOTH grid dims (paper Fig. 7's
+multi-dimensional transfer space) and ``--overlap`` hides the halo
+ppermutes behind each update's interior program; ``--unsplit`` swaps the
+dimension-split updates for one 2-D-stencil node so a single node's halo
+schedule spans both axes (corner blocks included).
+
   PYTHONPATH=src python examples/euler2d.py --nx 128 --ny 64 --steps 50
-  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-      PYTHONPATH=src python examples/euler2d.py --devices 4
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/euler2d.py --devices 8 --px 2 --overlap
 """
 
 import argparse
@@ -19,16 +25,24 @@ from repro.core import (Boundary, DistTensor, Executor, Graph, Layout,
                         MaxReducer, RecordArray, exclusive_padded_access,
                         make_mesh, make_reduction_result)
 from repro.physics.euler import (EULER_SPEC, RHO, pressure,
-                                 shock_bubble_init, sound_speed, update_dim)
+                                 shock_bubble_init, sound_speed, update_dim,
+                                 update_full)
 
 
-def build_solver(nx: int, ny: int, n_devices: int = 1, cfl: float = 0.4):
+def build_solver(nx: int, ny: int, n_devices: int = 1, cfl: float = 0.4,
+                 px: int = 1, overlap: bool = False, unsplit: bool = False):
     dx, dy = 2.0 / nx, 1.0 / ny
     mesh = None
     partition = (None, None)
     if n_devices > 1:
-        mesh = make_mesh((n_devices,), ("gy",))
-        partition = (None, "gy")  # paper: split the higher dim
+        if px > 1:
+            if n_devices % px:
+                raise ValueError(f"--px {px} must divide --devices {n_devices}")
+            mesh = make_mesh((px, n_devices // px), ("gx", "gy"))
+            partition = ("gx", "gy")  # 2-D decomposition
+        else:
+            mesh = make_mesh((n_devices,), ("gy",))
+            partition = (None, "gy")  # paper: split the higher dim
 
     u = DistTensor("u", (nx, ny), spec=EULER_SPEC, layout=Layout.SOA,
                    partition=partition, halo=(1, 1),
@@ -54,18 +68,40 @@ def build_solver(nx: int, ny: int, n_devices: int = 1, cfl: float = 0.4):
         return RecordArray(update_dim(rec.data, 1, dt / dy), EULER_SPEC,
                            Layout.SOA)
 
+    def update_xy(rec, s):
+        # unsplit scheme: both directional fluxes share one dt bound
+        dt = cfl / (s * (1.0 / dx + 1.0 / dy))
+        return RecordArray(update_full(rec.data, dt / dx, dt / dy),
+                           EULER_SPEC, Layout.SOA)
+
     # paper Listing 12: one graph per step, reduction feeds the dt
     g = Graph(name="euler_step")
     g.split(set_wavespeeds, u, ws)
     g.then_reduce(ws, smax, MaxReducer())
-    g.then_split(update_x, exclusive_padded_access(ux), smax, writes=(0,))
-    g.then_split(update_y, exclusive_padded_access(uy), smax, writes=(0,))
+    if unsplit:
+        g.then_split(update_xy, exclusive_padded_access(u), smax,
+                     writes=(0,), overlap=overlap)
+    else:
+        g.then_split(update_x, exclusive_padded_access(ux), smax,
+                     writes=(0,), overlap=overlap)
+        g.then_split(update_y, exclusive_padded_access(uy), smax,
+                     writes=(0,), overlap=overlap)
     return Executor(g, mesh=mesh), u
 
 
-def run(nx: int, ny: int, steps: int, n_devices: int = 1):
+def run(nx: int, ny: int, steps: int, n_devices: int = 1, px: int = 1,
+        overlap: bool = False, unsplit: bool = False):
     dx, dy = 2.0 / nx, 1.0 / ny
-    ex, u = build_solver(nx, ny, n_devices)
+    ex, u = build_solver(nx, ny, n_devices, px=px, overlap=overlap,
+                         unsplit=unsplit)
+    if overlap:
+        ht = ex.plan.halo_transfers
+        print(f"halo schedule: {len(ht)} blocks "
+              f"({sum(1 for h in ht if h.overlapped)} overlapped, "
+              f"{sum(1 for h in ht if h.mesh_axis)} ppermutes); "
+              f"fallbacks: {len(ex.plan.overlap_fallbacks)}")
+        for h in ht[:6]:
+            print("  " + h.describe())
     U0 = shock_bubble_init(nx, ny)
     mass0 = float(jnp.sum(U0[RHO])) * dx * dy
     state = ex.init_state(u=U0)
@@ -103,5 +139,13 @@ if __name__ == "__main__":
     ap.add_argument("--ny", type=int, default=64)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--px", type=int, default=1,
+                    help="mesh extent along x (2-D decomposition when > 1)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="hide halo ppermutes behind interior compute")
+    ap.add_argument("--unsplit", action="store_true",
+                    help="one 2-D-stencil update node instead of "
+                         "dimension-split x/y nodes")
     args = ap.parse_args()
-    run(args.nx, args.ny, args.steps, args.devices)
+    run(args.nx, args.ny, args.steps, args.devices, px=args.px,
+        overlap=args.overlap, unsplit=args.unsplit)

@@ -10,8 +10,14 @@ decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
 * a segment with partitioned tensors is lowered through one ``shard_map``
   — the paper's one-node-per-partition becomes one program per shard;
 * ``concurrent_padded_access`` + ``overlap=True`` splits the stencil into
-  interior/boundary programs so the halo ppermute flies during interior
-  compute (paper Fig. 7);
+  interior/boundary programs so the halo ppermutes fly during interior
+  compute (paper Fig. 7) — for any number of mesh-partitioned halo axes
+  and padded args: all edge strips are sent up front, corner blocks ride
+  the two-phase extended-edge exchange, and one boundary program per
+  (axis, side) consumes them (``core/halo.py``'s transfer schedule);
+  ``Executor.plan.halo_transfers`` lists the scheduled blocks per segment
+  and ``plan.overlap_fallbacks`` every declined overlap request (the
+  genuinely-degraded ones also warn once);
 * ``exclusive_padded_access`` captures the pre-update halo first and
   threads it as a data dependency (paper Fig. 9's extra edges);
 * host (Cpu) nodes and ``sync()`` break segments — the host work runs
@@ -38,6 +44,7 @@ decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
 
 from __future__ import annotations
 
+import warnings
 from contextlib import contextmanager
 from dataclasses import dataclass, field as dfield
 from functools import partial
@@ -55,7 +62,7 @@ from .layout import Layout, RecordArray, relayout
 from .tensor import DistTensor, ReductionResult
 
 __all__ = ["Executor", "execute", "make_mesh", "LayoutPlan", "RelayoutStep",
-           "solve_layouts"]
+           "HaloTransfer", "OverlapFallback", "solve_layouts"]
 
 # version-guarded shard_map accepting the modern kwarg set — bound here so
 # the executor does not depend on repro/__init__'s global jax monkeypatch
@@ -92,17 +99,22 @@ def _halo_plan(t: DistTensor, mesh: Optional[Mesh]) -> list[_HaloEntry]:
     return plan
 
 
+def _halo_axes(entries: list[_HaloEntry]) -> list[halo_lib.HaloAxis]:
+    return [halo_lib.HaloAxis(e.storage_axis, e.width, e.mesh_axis)
+            for e in entries]
+
+
 def _apply_halo(data: jax.Array, t: DistTensor, mesh: Optional[Mesh]) -> jax.Array:
-    for e in _halo_plan(t, mesh):
-        if e.mesh_axis is None:
-            data = halo_lib.pad_boundary_only(
-                data, axis=e.storage_axis, width=e.width,
-                boundary=t.boundary, constant=t.boundary_constant)
-        else:
-            data = halo_lib.exchange(
-                data, axis=e.storage_axis, width=e.width, axis_name=e.mesh_axis,
-                boundary=t.boundary, constant=t.boundary_constant)
-    return data
+    """Extend a shard by all its halos through the transfer schedule: all
+    axes' edge strips are sent up front, corner blocks ride the two-phase
+    extended-edge exchange (value-equal to the old sequential per-axis
+    exchange->concatenate chain, but nothing serializes on compute)."""
+    entries = _halo_plan(t, mesh)
+    if not entries:
+        return data
+    return halo_lib.exchange_multi(
+        data, _halo_axes(entries),
+        boundary=t.boundary, constant=t.boundary_constant)
 
 
 def _slice(x, axis, start, size):
@@ -124,17 +136,73 @@ class RelayoutStep:
     dst: Layout
 
 
+@dataclass(frozen=True)
+class HaloTransfer:
+    """One scheduled halo block of a segment's exchange (plan introspection).
+
+    ``block`` names which sides of which space dims the block extends —
+    ``((1, 'low'),)`` is an edge strip, ``((0, 'low'), (1, 'high'))`` a
+    corner.  ``mesh_axis`` is the axis the block's final hop permutes over
+    (``None`` — a local boundary fill, no transfer); ``phase`` is when the
+    send is issued (1 = up-front edge strips, 2+ = extended-edge corner
+    hops); ``overlapped`` marks blocks whose flight is hidden behind the
+    node's interior program."""
+
+    segment: int
+    node: str
+    tensor: str
+    phase: int
+    block: tuple[tuple[int, str], ...]   # ((space_dim, 'low'|'high'), ...)
+    mesh_axis: Optional[str]
+    width: int
+    overlapped: bool
+
+    def describe(self) -> str:
+        where = "+".join(f"{'-' if s == 'low' else '+'}d{d}"
+                         for d, s in self.block)
+        via = f"ppermute[{self.mesh_axis}]" if self.mesh_axis else "fill"
+        mode = "overlapped" if self.overlapped else "sync"
+        return (f"seg{self.segment} {self.node}: {self.tensor} {where} "
+                f"w={self.width} via {via} phase{self.phase} ({mode})")
+
+
+@dataclass(frozen=True)
+class OverlapFallback:
+    """A node that asked for ``overlap=True`` but was lowered through the
+    synchronous halo path, and why (no more silent drops)."""
+
+    segment: int
+    node: str
+    reason: str
+
+
 @dataclass
 class LayoutPlan:
-    """Solver output: one layout choice per record tensor per segment.
+    """Solver output plus the executor's halo-transfer schedule.
 
     ``initial`` is what :meth:`Executor.init_state` materializes (the first
     consuming segment's choice, so the common case needs zero relayouts);
-    ``relayouts`` are the boundary conversions of one sequential pass."""
+    ``relayouts`` are the boundary conversions of one sequential pass.
+    ``halo_transfers`` lists every scheduled halo block per segment
+    (:meth:`transfers_for_segment`), ``overlap_fallbacks`` every declined
+    overlap request with its reason — both filled in by the Executor."""
 
     per_segment: list[dict[str, Layout]] = dfield(default_factory=list)
     initial: dict[str, Layout] = dfield(default_factory=dict)
     relayouts: list[RelayoutStep] = dfield(default_factory=list)
+    halo_transfers: list[HaloTransfer] = dfield(default_factory=list)
+    overlap_fallbacks: list[OverlapFallback] = dfield(default_factory=list)
+
+    def transfers_for_segment(self, segment: int) -> list[HaloTransfer]:
+        return [h for h in self.halo_transfers if h.segment == segment]
+
+    def describe_transfers(self) -> str:
+        if not self.halo_transfers:
+            return "(no scheduled halo transfers)"
+        lines = [h.describe() for h in self.halo_transfers]
+        lines += [f"seg{f.segment} {f.node}: overlap fallback — {f.reason}"
+                  for f in self.overlap_fallbacks]
+        return "\n".join(lines)
 
 
 def _segment_nodes(kind: str, payload):
@@ -252,6 +320,65 @@ def solve_layouts(
     return plan
 
 
+# -- overlap decision (paper Fig. 7 generalized) -------------------------------
+
+# (node name, reason) pairs already warned about — "warn once" holds across
+# the sub-executors a loop segment re-creates for the same node
+_warned_overlap: set[tuple[str, str]] = set()
+
+
+@dataclass(frozen=True)
+class _OverlapDecision:
+    """Whether an ``overlap=True`` split node gets the interior/boundary
+    lowering: ``strips`` = ((space_dim, max halo width), ...) ascending,
+    or None with a ``reason`` (``warn`` when real transfers get degraded
+    to the synchronous path rather than there being nothing to hide)."""
+
+    strips: Optional[tuple[tuple[int, int], ...]]
+    reason: Optional[str] = None
+    warn: bool = False
+
+
+def _decide_overlap(node: Node, mesh: Optional[Mesh], eff) -> _OverlapDecision:
+    if mesh is None:
+        return _OverlapDecision(
+            None, "graph has no mesh — nothing to overlap", False)
+    padded = [eff(t) for _, t, mode in node.tensor_args() if mode.padded]
+    if not padded:
+        return _OverlapDecision(
+            None, "no padded-access tensor arg to overlap", True)
+    strips: dict[int, int] = {}
+    for t in padded:
+        for e in _halo_plan(t, mesh):
+            if e.mesh_axis is not None:
+                strips[e.dim] = max(strips.get(e.dim, 0), e.width)
+    if not strips:
+        return _OverlapDecision(
+            None, "no mesh-partitioned halo axis (single shard along every "
+            "haloed dim)", False)
+    ref = padded[0]
+    tensors = [eff(t) for _, t, _ in node.tensor_args()]
+    for d in sorted(strips):
+        w = strips[d]
+        ax_name = ref.partition[d]
+        for t in tensors:
+            if len(t.space) <= d or t.space[d] != ref.space[d] \
+                    or t.partition[d] != ax_name:
+                return _OverlapDecision(
+                    None, f"arg {t.name!r} does not align with "
+                    f"partitioned halo dim {d} of {ref.name!r}", True)
+            try:
+                t.storage_axis(d)
+            except ValueError as exc:
+                return _OverlapDecision(None, str(exc), True)
+        m = ref.space[d] // mesh.shape[ax_name]
+        if m <= 2 * w:
+            return _OverlapDecision(
+                None, f"shard extent {m} along dim {d} leaves no interior "
+                f"behind boundary strips of width {w}", True)
+    return _OverlapDecision(tuple(sorted(strips.items())))
+
+
 class Executor:
     """Compile + run a Graph against an optional mesh."""
 
@@ -276,7 +403,59 @@ class Executor:
                 for lay in lays:
                     (t.with_(layout=lay) if t.is_record
                      else t).validate_mesh(mesh)
+        self._overlap_decisions: dict[str, _OverlapDecision] = {}
+        self._collect_halo_schedule()
         self._jitted: dict[int, Callable] = {}
+
+    def _collect_halo_schedule(self) -> None:
+        """Static pass: record every scheduled halo transfer per segment in
+        ``plan.halo_transfers``, decide overlap per node, and surface every
+        declined ``overlap=True`` in ``plan.overlap_fallbacks`` (warning
+        once when the fallback actually degrades scheduling)."""
+        mesh = self.mesh
+        for si, (kind, payload) in enumerate(self._segments):
+            seg_layouts = self.plan.per_segment[si]
+
+            def eff(t, _lays=seg_layouts):
+                if t.is_record:
+                    lay = _lays.get(t.name, t.layout)
+                    if lay is not t.layout:
+                        return t.with_(layout=lay)
+                return t
+
+            for node in _segment_nodes(kind, payload):
+                if node.kind not in ("split", "op"):
+                    continue
+                dec = None
+                if node.kind == "split" and node.overlap:
+                    dec = _decide_overlap(node, mesh, eff)
+                    self._overlap_decisions[node.name] = dec
+                    if dec.strips is None:
+                        self.plan.overlap_fallbacks.append(
+                            OverlapFallback(si, node.name, dec.reason))
+                        key = (node.name, dec.reason)
+                        if dec.warn and key not in _warned_overlap:
+                            _warned_overlap.add(key)
+                            warnings.warn(
+                                f"node {node.name!r}: overlap=True falls "
+                                f"back to synchronous halo exchange — "
+                                f"{dec.reason}", RuntimeWarning,
+                                stacklevel=3)
+                overlapped = dec is not None and dec.strips is not None
+                for _, t, mode in node.tensor_args():
+                    if not mode.padded:
+                        continue
+                    entries = _halo_plan(eff(t), mesh)
+                    if not entries:
+                        continue
+                    axes = _halo_axes(entries)
+                    for phase, bkey in halo_lib.iter_block_keys(axes):
+                        last, _side = bkey[-1]
+                        self.plan.halo_transfers.append(HaloTransfer(
+                            si, node.name, t.name, phase,
+                            tuple((entries[j].dim, s) for j, s in bkey),
+                            entries[last].mesh_axis, entries[last].width,
+                            overlapped))
 
     # -- layout plumbing ---------------------------------------------------
     def _eff(self, t: DistTensor) -> DistTensor:
@@ -485,8 +664,11 @@ class Executor:
             from .graph import TensorArg
             write_tensors.append(a.tensor if isinstance(a, TensorArg) else a)
 
-        if node.overlap and sharded and self._overlap_entry(node) is not None:
-            self._lower_split_overlapped(node, state, write_tensors)
+        dec = self._overlap_decisions.get(node.name)
+        if node.overlap and sharded and dec is not None \
+                and dec.strips is not None:
+            self._lower_split_overlapped(node, state, write_tensors,
+                                         dec.strips)
             return
 
         vals = self._resolve_args(node, state, sharded)
@@ -506,94 +688,115 @@ class Executor:
             data = v.data if isinstance(v, RecordArray) else jnp.asarray(v)
             state[t.name] = data
 
-    def _overlap_entry(self, node: Node) -> Optional[tuple[DistTensor, _HaloEntry]]:
-        """Overlap lowering applies when exactly one padded-access arg has
-        exactly one mesh-partitioned halo dim."""
-        cands = []
-        for i, t, mode in node.tensor_args():
-            if not mode.padded:
+    def _lower_split_overlapped(self, node: Node, state: dict,
+                                write_tensors,
+                                strips: tuple[tuple[int, int], ...]) -> None:
+        """Interior/boundary split over N partitioned halo axes: every
+        halo block's ppermute is issued up front (phase 1 edge strips,
+        phase 2+ corner hops), the interior program runs on the unextended
+        shard while they fly, then one boundary-strip program per
+        (axis, side) consumes the received blocks and the results are
+        stitched (paper Fig. 7 generalized to the multi-dimensional
+        transfer space of §5.4).
+
+        ``strips`` is ((space_dim, W), ...) ascending; ``fn`` must be a
+        shape-polymorphic stencil mapping (m + 2w) -> m cells along every
+        haloed dim.  fn sees, per variant, exactly the sub-region of the
+        extended array that its output cells read, so overlap output ==
+        synchronous output value-for-value."""
+        mesh = self.mesh
+        strip_dims = [d for d, _ in strips]
+        w_strip = dict(strips)
+
+        # Resolve every arg once: all transfer-schedule sends are issued
+        # here, before any variant program is traced.
+        preps: list[tuple[str, Any]] = []
+        for a in node.args:
+            if isinstance(a, ReductionResult):
+                preps.append(("raw", state[a.name]))
+                continue
+            if isinstance(a, TensorArg):
+                t, mode = a.tensor, a.mode
+            elif isinstance(a, DistTensor):
+                t, mode = a, AccessMode.DEFAULT
+            else:
+                preps.append(("raw", a))
                 continue
             t = self._eff(t)
-            entries = [e for e in _halo_plan(t, self.mesh) if e.mesh_axis]
-            if len(entries) == 1:
-                cands.append((t, entries[0]))
-            elif entries:
-                return None
-        return cands[0] if len(cands) == 1 else None
+            data = state[t.name]
+            entries = ({e.dim: e for e in _halo_plan(t, mesh)}
+                       if mode.padded else {})
+            dims = sorted(set(entries) | set(strip_dims))
+            axes = [halo_lib.HaloAxis(
+                t.storage_axis(d),
+                entries[d].width if d in entries else 0,
+                entries[d].mesh_axis if d in entries else None)
+                for d in dims]
+            blocks = (halo_lib.exchange_blocks(
+                data, axes, boundary=t.boundary,
+                constant=t.boundary_constant)
+                if any(ax.width for ax in axes) else {(): data})
+            preps.append(("tensor", (t, dims, axes, blocks)))
 
-    def _lower_split_overlapped(self, node: Node, state: dict,
-                                write_tensors) -> None:
-        """Interior/boundary split: ppermute of halos overlaps the interior
-        stencil program (paper Fig. 7).  fn must be a stencil mapping
-        (m + 2w) -> m cells along the partitioned dim."""
-        t, entry = self._overlap_entry(node)
-        ax, w = entry.storage_axis, entry.width
-        from .graph import TensorArg
+        def ranges_for(variant, dims, axes, blocks):
+            """Per-axis extended-coordinate input range for one variant.
 
-        def arg_variant(variant: str):
-            """Resolve args with the padded arg replaced per variant."""
-            vals = []
-            for i, a in enumerate(node.args):
-                if isinstance(a, ReductionResult):
-                    vals.append(state[a.name])
-                    continue
-                at, mode = (a.tensor, a.mode) if isinstance(a, TensorArg) else (
-                    (a, AccessMode.DEFAULT) if isinstance(a, DistTensor) else (None, None))
-                if at is None:
-                    vals.append(a)
-                    continue
-                at = self._eff(at)
-                data = state[at.name]
-                if at.name == t.name and mode.padded:
-                    # boundary-pad the non-partitioned haloed dims first
-                    for e in _halo_plan(at, self.mesh):
-                        if e.mesh_axis is None:
-                            data = halo_lib.pad_boundary_only(
-                                data, axis=e.storage_axis, width=e.width,
-                                boundary=at.boundary,
-                                constant=at.boundary_constant)
-                    left, right = halo_lib.halo_blocks(
-                        data, axis=ax, width=w, axis_name=entry.mesh_axis,
-                        boundary=at.boundary, constant=at.boundary_constant)
-                    n = data.shape[ax]
-                    if variant == "interior":
-                        data = data  # (n,) -> fn -> n - 2w interior cells
-                    elif variant == "left":
-                        data = jnp.concatenate(
-                            [left, _slice(data, ax, 0, 2 * w)], axis=ax)
-                    else:
-                        data = jnp.concatenate(
-                            [_slice(data, ax, n - 2 * w, 2 * w), right], axis=ax)
-                elif mode.padded:
-                    data = _apply_halo(data, at, self.mesh)
+            A variant's output domain is: the full boundary slab along its
+            own dim, the interior along every earlier strip dim (those
+            slabs were peeled off by earlier variants), the full extent
+            elsewhere; the input range widens it by this arg's own halo."""
+            vd = None if variant == "interior" else variant[0]
+            out = []
+            for d, ax in zip(dims, axes):
+                m = blocks[()].shape[ax.axis]
+                w, big_w = ax.width, w_strip.get(d, 0)
+                if d == vd:
+                    out.append((0, big_w + 2 * w) if variant[1] == "low"
+                               else (m - big_w, m + 2 * w))
+                elif big_w and (vd is None or d < vd):
+                    out.append((big_w, m - big_w + 2 * w))
                 else:
-                    # non-padded args must be sliced to match output extent
-                    if at.name != t.name and variant != "interior":
-                        n_out = state[t.name].shape[ax]
-                        s_ax = ax
-                        if variant == "left":
-                            data = _slice(data, s_ax, 0, w)
-                        else:
-                            data = _slice(data, s_ax, n_out - w, w)
-                    elif variant == "interior" and at.name != t.name:
-                        n_out = state[t.name].shape[ax]
-                        data = _slice(data, ax, w, n_out - 2 * w)
-                vals.append(at.wrap(data) if at.is_record else data)
-            return vals
+                    out.append((0, m + 2 * w))
+            return out
 
-        def run(variant: str):
-            out = node.fn(*arg_variant(variant))
+        def run(variant):
+            vals = []
+            for kind, payload in preps:
+                if kind == "raw":
+                    vals.append(payload)
+                    continue
+                t, dims, axes, blocks = payload
+                data = halo_lib.assemble_region(
+                    blocks, axes, ranges_for(variant, dims, axes, blocks))
+                vals.append(t.wrap(data) if t.is_record else data)
+            out = node.fn(*vals)
             if len(write_tensors) == 1:
                 out = (out,)
+            if len(out) != len(write_tensors):
+                raise ValueError(
+                    f"{node.name}: fn returned {len(out)} values for "
+                    f"{len(write_tensors)} writes")
             return [v.data if isinstance(v, RecordArray) else jnp.asarray(v)
                     for v in out]
 
         interior = run("interior")
-        left = run("left")
-        right = run("right")
-        for wt, li, ii, ri in zip(write_tensors, left, interior, right):
-            state[wt.name] = jnp.concatenate(
-                [li, ii, ri], axis=self._eff(wt).storage_axis(entry.dim))
+        strip_outs = {
+            (k, side): run((d, side))
+            for k, (d, _) in enumerate(strips) for side in ("low", "high")}
+
+        for wi, wt in enumerate(write_tensors):
+            wt_eff = self._eff(wt)
+
+            def stitch(k: int):
+                if k == len(strips):
+                    return interior[wi]
+                d = strips[k][0]
+                return jnp.concatenate(
+                    [strip_outs[(k, "low")][wi], stitch(k + 1),
+                     strip_outs[(k, "high")][wi]],
+                    axis=wt_eff.storage_axis(d))
+
+            state[wt.name] = stitch(0)
 
     def _lower_reduce(self, node: Node, state: dict, sharded: bool) -> None:
         t, field = node.args
@@ -692,13 +895,15 @@ class Executor:
                          for k in state}
 
                 def shard_body(s):
-                    return lax.while_loop(sub.condition, body_fn, body_fn(s))
+                    # while semantics: predicate gates the FIRST iteration
+                    # too (an initially-false condition runs nothing)
+                    return lax.while_loop(sub.condition, body_fn, s)
 
                 fn = shard_map(shard_body, mesh=self.mesh,
                                    in_specs=(specs,), out_specs=specs,
                                    check_vma=False)
                 return fn(state)
-            return lax.while_loop(sub.condition, body_fn, body_fn(state))
+            return lax.while_loop(sub.condition, body_fn, state)
 
         return jax.jit(call, donate_argnums=0 if self.donate else ())
 
@@ -741,7 +946,7 @@ class Executor:
                 sub_exec = Executor(
                     payload, self.mesh, donate=False,
                     layout_overrides=self.plan.per_segment[i])
-                state = sub_exec(state)
+                # while semantics: check before the first iteration too
                 while bool(jax.device_get(payload.condition(state))):
                     state = sub_exec(state)
             elif kind == "host":

@@ -13,7 +13,9 @@ exactly the information the paper uses to minimize graph connectivity:
 
 * plain tensor arg                      — no halo read (paper's default);
 * ``concurrent_padded_access(t)``       — reads halo, writes a different
-  buffer: halo exchange may overlap the kernel's interior compute;
+  buffer: halo exchange may overlap the kernel's interior compute
+  (``overlap=True`` on split nodes enables it for any number of
+  mesh-partitioned halo axes — 2-D/3-D decompositions included);
 * ``exclusive_padded_access(t)``        — reads halo of a buffer the kernel
   itself updates: the pre-update halo must be captured first (ordering edge);
 * ``*_in_shared(t)``                    — additionally stage blocks in VMEM
@@ -266,7 +268,15 @@ class Graph:
               overlap: bool = False,
               layout: Optional[Layout] = None) -> "Graph":
         """Tensor op on the current level; becomes one node per partition
-        (paper §5.3.3) — here: SPMD over the tensor's mesh axes."""
+        (paper §5.3.3) — here: SPMD over the tensor's mesh axes.
+
+        ``overlap=True`` asks for the interior/boundary lowering: the
+        padded args' halo transfers (all partitioned axes, corners
+        included) fly while the interior program runs.  ``fn`` must then
+        be a shape-polymorphic stencil (``m + 2w -> m`` cells along every
+        haloed dim).  Declined requests are recorded in
+        ``Executor.plan.overlap_fallbacks`` (and warn once when real
+        transfers were degraded)."""
         self._current_level().append(
             Node(kind="split", fn=fn, args=self._hint_args(args, layout),
                  writes=None if writes is None else tuple(writes),
@@ -303,8 +313,10 @@ class Graph:
         return self
 
     def conditional(self, pred: Callable) -> "Graph":
-        """Re-execute this graph while ``pred(state)`` is true (paper
-        §5.3.6 — do/while semantics, cf. Listing 9's map-reduce loop)."""
+        """Execute this graph while ``pred(state)`` is true (paper §5.3.6,
+        cf. Listing 9's map-reduce loop).  Proper *while* semantics: the
+        predicate gates the first iteration too, so a graph entered with a
+        false condition runs zero times."""
         self.condition = pred
         return self
 

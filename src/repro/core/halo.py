@@ -7,15 +7,32 @@ first-order extrapolation).  Here a shard's halo arrives via
 latency-hiding scheduler runs asynchronously, which is exactly the paper's
 "padding ops can overlap the split kernel" (Fig. 7) in SPMD form.
 
-All functions in this module run *inside* shard_map (per-shard view).
-``pad_boundary_only`` provides the single-shard / unpartitioned-dim case.
+Multi-axis halos are a *transfer schedule* over blocks keyed by which
+sides of which axes they extend (paper §5.4's optimal scheduling across a
+multi-dimensional space):
+
+* phase 1 — every axis's edge strips leave at once (independent sends on
+  the unextended shard);
+* phase p — corner/vertex blocks: each phase-(p-1) block's edge along a
+  later axis travels one more hop (the two-phase extended-edge exchange,
+  so diagonal neighbours never talk directly);
+* :func:`assemble_region` stitches any rectangular region of the extended
+  array back together from the blocks — the full array for a synchronous
+  exchange, or just a boundary strip's input for the overlapped lowering.
+
+Because no block transfer depends on compute (phase p depends only on
+phase p-1 receives), every send can be in flight while the interior
+program runs.  All collective paths run *inside* shard_map (per-shard
+view); axes with ``axis_name=None`` are filled locally from the boundary
+policy, so fill-only schedules work anywhere.
 """
 
 from __future__ import annotations
 
 import enum
+from dataclasses import dataclass
 from functools import partial
-from typing import Any
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +40,12 @@ from jax import lax
 
 __all__ = [
     "Boundary",
+    "HaloAxis",
     "exchange",
+    "exchange_blocks",
+    "exchange_multi",
+    "assemble_region",
+    "iter_block_keys",
     "halo_blocks",
     "pad_boundary_only",
     "unpad",
@@ -158,15 +180,179 @@ def pad_boundary_only(
     axis): both halos come from the boundary policy (PERIODIC wraps self)."""
     if width == 0:
         return x
-    if boundary is Boundary.PERIODIC:
-        n = x.shape[axis]
-        # modular gather supports width > n (wraps multiple times)
-        left = jnp.take(x, (jnp.arange(-width, 0) % n), axis=axis)
-        right = jnp.take(x, (jnp.arange(width) % n), axis=axis)
-    else:
-        left = _edge_fill(x, axis, width, "left", boundary, constant)
-        right = _edge_fill(x, axis, width, "right", boundary, constant)
-    return jnp.concatenate([left, x, right], axis=axis)
+    low, high = _block_pair(x, HaloAxis(axis, width, None), boundary, constant)
+    return jnp.concatenate([low, x, high], axis=axis)
+
+
+# -- multi-axis transfer schedule ---------------------------------------------
+
+@dataclass(frozen=True)
+class HaloAxis:
+    """One haloed storage axis of a shard's block schedule.
+
+    ``axis_name=None`` means the axis is not mesh-partitioned: its halo
+    comes from the boundary policy (a local fill, no transfer)."""
+
+    axis: int                       # storage axis
+    width: int
+    axis_name: Optional[str] = None  # mesh axis; None -> local fill
+
+
+# A block key identifies which sides of which axes a block extends:
+# a tuple of (axis_list_index, 'low'|'high') pairs with strictly ascending
+# indices.  () is the shard itself; ((0,'low'),) its low edge strip along
+# axes[0]; ((0,'low'),(1,'high')) the corner beyond both.
+BlockKey = tuple
+
+
+def iter_block_keys(axes: Sequence[HaloAxis]):
+    """Yield ``(phase, key)`` for every block the schedule transfers.
+
+    Phase 1 keys are the per-axis edge strips (sent from the unextended
+    shard, all independent); phase p keys extend a phase-(p-1) block along
+    a strictly later axis — the extended-edge exchange that routes corner
+    data through face neighbours.  Zero-width axes contribute nothing.
+    """
+    frontier: list[BlockKey] = [()]
+    phase = 0
+    while frontier:
+        phase += 1
+        nxt: list[BlockKey] = []
+        for key in frontier:
+            start = key[-1][0] + 1 if key else 0
+            for j in range(start, len(axes)):
+                if axes[j].width == 0:
+                    continue
+                for side in ("low", "high"):
+                    k = key + ((j, side),)
+                    yield phase, k
+                    nxt.append(k)
+        frontier = nxt
+
+
+def _block_pair(
+    x: jax.Array, a: HaloAxis, boundary: Boundary, constant
+) -> tuple[jax.Array, jax.Array]:
+    """(low, high) halo blocks of ``x`` along one axis: neighbour transfer
+    for partitioned axes, boundary-policy fill otherwise."""
+    if a.axis_name is None:
+        if boundary is Boundary.PERIODIC:
+            n = x.shape[a.axis]
+            # modular gather supports width > n (wraps multiple times)
+            low = jnp.take(x, (jnp.arange(-a.width, 0) % n), axis=a.axis)
+            high = jnp.take(x, (jnp.arange(a.width) % n), axis=a.axis)
+            return low, high
+        return (_edge_fill(x, a.axis, a.width, "left", boundary, constant),
+                _edge_fill(x, a.axis, a.width, "right", boundary, constant))
+    return halo_blocks(x, axis=a.axis, width=a.width, axis_name=a.axis_name,
+                       boundary=boundary, constant=constant)
+
+
+def exchange_blocks(
+    x: jax.Array,
+    axes: Sequence[HaloAxis],
+    *,
+    boundary: Boundary = Boundary.TRANSMISSIVE,
+    constant: Any = 0.0,
+) -> dict[BlockKey, jax.Array]:
+    """Run the transfer schedule: every block of :func:`iter_block_keys`,
+    plus the shard itself under ``()``.
+
+    All phase-1 sends are issued against ``x`` directly and phase p
+    depends only on phase p-1 receives, so nothing here waits on compute —
+    XLA's latency-hiding scheduler overlaps the collectives with whatever
+    runs next.  Equivalent by value to the sequential per-axis
+    exchange-then-concatenate chain (fills commute with earlier-axis
+    extension because they act pointwise along the filled axis).
+    Partitioned axes must be called inside shard_map.
+    """
+    blocks: dict[BlockKey, jax.Array] = {(): x}
+    frontier: list[BlockKey] = [()]
+    while frontier:
+        nxt: list[BlockKey] = []
+        for key in frontier:
+            start = key[-1][0] + 1 if key else 0
+            for j in range(start, len(axes)):
+                a = axes[j]
+                if a.width == 0:
+                    continue
+                low, high = _block_pair(blocks[key], a, boundary, constant)
+                blocks[key + ((j, "low"),)] = low
+                blocks[key + ((j, "high"),)] = high
+                nxt += [key + ((j, "low"),), key + ((j, "high"),)]
+        frontier = nxt
+    return blocks
+
+
+def assemble_region(
+    blocks: dict[BlockKey, jax.Array],
+    axes: Sequence[HaloAxis],
+    ranges: Sequence[tuple[int, int]],
+) -> jax.Array:
+    """Stitch one rectangular region of the extended array from ``blocks``.
+
+    ``ranges[i]`` is the half-open extent along ``axes[i].axis`` in
+    *extended* coordinates: ``[0, w)`` is the low halo zone, ``[w, w+m)``
+    the shard, ``[w+m, w+2w+m)`` the high halo zone.  Full ranges
+    reproduce the whole extended shard; sub-ranges cut exactly the input
+    a boundary-strip program needs without touching unrelated blocks.
+    """
+    x = blocks[()]
+
+    def rec(idx: int, key: BlockKey, slabs):
+        if idx == len(axes):
+            out = blocks[key]
+            for ax, start, size in slabs:
+                out = _take(out, ax, start, size)
+            return out
+        a = axes[idx]
+        lo, hi = ranges[idx]
+        m = x.shape[a.axis]
+        parts = []
+        if lo < a.width:  # low halo zone
+            end = min(hi, a.width)
+            sub = rec(idx + 1, key + ((idx, "low"),), slabs)
+            if (lo, end) != (0, a.width):
+                sub = _take(sub, a.axis, lo, end - lo)
+            parts.append(sub)
+        mid_lo, mid_hi = max(lo, a.width), min(hi, a.width + m)
+        if mid_lo < mid_hi:  # shard zone
+            slab = (a.axis, mid_lo - a.width, mid_hi - mid_lo)
+            parts.append(rec(idx + 1, key,
+                             slabs if slab[1:] == (0, m) else slabs + [slab]))
+        base = a.width + m
+        if hi > base:  # high halo zone
+            start = max(lo, base)
+            sub = rec(idx + 1, key + ((idx, "high"),), slabs)
+            if (start, hi) != (base, base + a.width):
+                sub = _take(sub, a.axis, start - base, hi - start)
+            parts.append(sub)
+        if not parts:
+            raise ValueError(f"empty region range {ranges[idx]} on axis "
+                             f"{a.axis}")
+        return parts[0] if len(parts) == 1 else jnp.concatenate(
+            parts, axis=a.axis)
+
+    return rec(0, (), [])
+
+
+def exchange_multi(
+    x: jax.Array,
+    axes: Sequence[HaloAxis],
+    *,
+    boundary: Boundary = Boundary.TRANSMISSIVE,
+    constant: Any = 0.0,
+) -> jax.Array:
+    """Extend a shard along every haloed axis at once via the transfer
+    schedule (corners included).  Value-equal to chaining
+    :func:`exchange` / :func:`pad_boundary_only` per axis in list order,
+    but every inter-device send is issued up front."""
+    axes = [a for a in axes if a.width]
+    if not axes:
+        return x
+    blocks = exchange_blocks(x, axes, boundary=boundary, constant=constant)
+    ranges = [(0, x.shape[a.axis] + 2 * a.width) for a in axes]
+    return assemble_region(blocks, axes, ranges)
 
 
 def unpad(x: jax.Array, *, axis: int, width: int) -> jax.Array:

@@ -1,9 +1,11 @@
-"""Jitted public wrapper for the eikonal FIM sweep."""
+"""Jitted public wrapper + graph builder for the eikonal FIM sweep."""
 
 from functools import partial
 
 import jax
 
+from repro.core.graph import Graph, exclusive_padded_access
+from repro.core.tensor import DistTensor
 from .kernel import eikonal_fim_pallas
 from .ref import eikonal_fim_ref
 
@@ -17,3 +19,43 @@ def eikonal_fim_sweep(phi_haloed, source_mask, h, *, inner: int = 4,
         return eikonal_fim_pallas(phi_haloed, source_mask, h, inner=inner,
                                   block=block, interpret=interpret)
     return eikonal_fim_ref(phi_haloed, source_mask, h, inner=inner, block=block)
+
+
+def make_eikonal_graph(
+    phi: DistTensor,
+    mask: DistTensor,
+    h: float,
+    *,
+    inner: int = 1,
+    overlap: bool = True,
+    use_pallas: bool = False,
+    block=(8, 128),
+    interpret: bool = True,
+) -> Graph:
+    """One outer FIM sweep as a Ripple graph node: ``phi`` (halo ``(1, 1)``,
+    possibly 2-D partitioned) updated in place, ``source_mask`` riding as
+    an unpadded output-aligned arg (the overlapped lowering slices it per
+    boundary strip).  Run the graph repeatedly — or wrap it in
+    ``conditional`` with a residual reduction — for the paper's
+    convergence loop.
+
+    ``inner > 1`` runs frozen-halo sweeps per tile, which makes the
+    result depend on the tile decomposition (paper's FIM ghost-zone
+    trade) — so only the default ``inner=1`` (a pure radius-1 stencil,
+    lowered without any tile grid so boundary strips of any thickness
+    work) is decomposition-invariant and value-identical between the
+    overlapped and synchronous lowerings; with ``inner > 1`` the caller
+    must pick a ``block`` that tiles every strip extent.
+    """
+    from .kernel import godunov_update
+
+    def sweep(p_haloed, m):
+        if inner == 1:
+            return godunov_update(p_haloed, m, h)
+        return eikonal_fim_sweep(p_haloed, m, h, inner=inner, block=block,
+                                 use_pallas=use_pallas, interpret=interpret)
+
+    g = Graph(name="eikonal_sweep")
+    g.split(sweep, exclusive_padded_access(phi), mask, writes=(0,),
+            overlap=overlap)
+    return g

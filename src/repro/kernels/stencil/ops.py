@@ -1,4 +1,5 @@
-"""Jitted public wrapper for the FORCE flux-difference stencil.
+"""Jitted public wrapper + graph builder for the FORCE flux-difference
+stencil.
 
 Layout dispatch: the Pallas kernel walks halo-inclusive tiles, which
 needs per-axis storage (AoS or SoA).  An AoSoA input is relayouted to the
@@ -11,7 +12,9 @@ from functools import partial
 
 import jax
 
+from repro.core.graph import Graph, concurrent_padded_access
 from repro.core.layout import dispatch_with_relayout
+from repro.core.tensor import DistTensor
 from .kernel import (PREFERRED_LAYOUT, SUPPORTED_LAYOUTS,
                      flux_difference_pallas)
 from .ref import flux_difference_ref
@@ -26,3 +29,35 @@ def flux_difference(state_haloed, lam_x, lam_y, *, block=(8, 128),
         flux_difference_pallas, state_haloed, lam_x, lam_y,
         supported=SUPPORTED_LAYOUTS, preferred=PREFERRED_LAYOUT,
         block=block, interpret=interpret)
+
+
+def make_flux_difference_graph(
+    u: DistTensor,
+    out: DistTensor,
+    lam_x,
+    lam_y,
+    *,
+    overlap: bool = True,
+    use_pallas: bool = False,
+    block=(8, 128),
+    interpret: bool = True,
+) -> Graph:
+    """One-node Ripple graph: FORCE flux difference over a (possibly
+    2-D-partitioned) Euler record ``u`` with halo ``(1, 1)`` into ``out``.
+
+    With ``overlap=True`` the executor's transfer schedule sends every
+    halo block (edge strips + corners) up front and hides the flights
+    behind the interior program; the per-(axis, side) boundary strips are
+    stitched afterwards.  The Pallas path asserts block-divisible extents
+    (boundary strips are 1 cell thin), so the default here is the
+    shape-polymorphic reference path — flip ``use_pallas`` where the
+    interior extents divide ``block``.
+    """
+
+    def flux_node(rec, _out):
+        return flux_difference(rec, lam_x, lam_y, block=block,
+                               use_pallas=use_pallas, interpret=interpret)
+
+    g = Graph(name="flux_difference")
+    g.split(flux_node, concurrent_padded_access(u), out, overlap=overlap)
+    return g

@@ -121,6 +121,18 @@ def update_dim(U_haloed: jax.Array, dim: int, lam) -> jax.Array:
     return _shift(U_haloed, dim, 1, n) - flux_difference_dim(U_haloed, dim, lam)
 
 
+def update_full(U_haloed: jax.Array, lam_x, lam_y) -> jax.Array:
+    """Unsplit FORCE update: U' = U - lam_x dF_x - lam_y dF_y in one shot.
+
+    Haloed by 1 in BOTH space dims — one node whose input spans the full
+    2-D extended shard, so a 2-D-partitioned run exercises the whole
+    multi-axis transfer schedule and the N-axis overlapped lowering.
+    Shape-polymorphic: (4, m+2, n+2) -> (4, m, n).  Stability: use
+    dt <= cfl / (s * (1/dx + 1/dy)) rather than the split scheme's CFL."""
+    center = U_haloed[:, 1:-1, 1:-1]
+    return center - flux_difference(U_haloed, lam_x, lam_y)
+
+
 def shock_bubble_init(nx: int, ny: int, *, mach: float = 3.81) -> jax.Array:
     """Initial conditions: Mach-3.81 shock hitting a low-density bubble
     (paper Fig. 11), on [0,2]x[0,1]."""

@@ -86,10 +86,13 @@ def test_graph_reduce_paper_listing8():
 
 
 def test_graph_conditional_map_reduce_paper_listing9():
-    """Paper Listing 9: init to 4, subtract 1 until the sum hits 0."""
+    """Paper Listing 9: init to 4, subtract 1 until the sum hits 0.
+
+    ``r`` starts nonzero so the while-semantics loop (predicate gates the
+    first iteration) enters; each iteration recomputes it from ``x``."""
     size = 16
     x = DistTensor("x", (size,))
-    res = make_reduction_result("r")
+    res = make_reduction_result("r", init=1.0)
 
     init = Graph(name="init")
     init.split(lambda xs: jnp.full_like(xs, 4.0), x, writes=(0,))
@@ -105,6 +108,57 @@ def test_graph_conditional_map_reduce_paper_listing9():
     state = execute(g)
     np.testing.assert_array_equal(np.asarray(state["x"]), np.zeros(size))
     assert float(state["r"]) == 0.0
+
+
+def test_graph_conditional_false_on_entry_runs_zero_times():
+    """While semantics regression: a conditional subgraph whose predicate
+    is false on entry must not run its body even once (the old lowering
+    seeded lax.while_loop with body_fn(state) — do-while)."""
+    size = 8
+    x = DistTensor("x", (size,))
+
+    loop = Graph(name="never")
+    loop.split(lambda xs: xs + 1.0, x, writes=(0,))
+    loop.conditional(lambda state: state["go"] != 0.0)
+
+    g = Graph()
+    g.emplace(loop)
+    ex = Executor(g)
+    state = ex.init_state(x=jnp.full(size, 3.0))
+    state["go"] = jnp.asarray(0.0)  # predicate false before first iteration
+    state = ex(state)
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.full(size, 3.0))
+
+    # and the same loop shape with a satisfiable predicate still iterates
+    count = Graph(name="until_five")
+    count.split(lambda xs: xs + 1.0, x, writes=(0,))
+    count.conditional(lambda s: s["x"][0] < 5.0)
+    ex2 = Executor(Graph().emplace(count))
+    st = ex2.init_state(x=jnp.full(size, 3.0))
+    st = ex2(st)
+    np.testing.assert_array_equal(np.asarray(st["x"]), np.full(size, 5.0))
+
+
+def test_graph_conditional_false_on_entry_host_loop():
+    """Same while-semantics guarantee for the host-driven loop (a
+    conditional subgraph containing a host node)."""
+    size = 4
+    x = DistTensor("x", (size,))
+    seen = []
+
+    loop = Graph(name="host_never")
+    loop.split(lambda xs: xs + 1.0, x, writes=(0,))
+    loop.sync(lambda: seen.append("ran"))
+    loop.conditional(lambda state: state["go"] != 0.0)
+
+    g = Graph()
+    g.emplace(loop)
+    ex = Executor(g)
+    state = ex.init_state()
+    state["go"] = jnp.asarray(0.0)
+    state = ex(state)
+    assert seen == []
+    np.testing.assert_array_equal(np.asarray(state["x"]), np.zeros(size))
 
 
 def test_graph_sync_and_host_node():

@@ -1,0 +1,150 @@
+"""Multi-axis halo transfer schedule + overlap plan introspection
+(single-device semantics; the 8-device corner/overlap equivalence runs in
+test_distributed.py subprocesses)."""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Boundary, DistTensor, Executor, Graph,
+                        concurrent_padded_access, make_mesh,
+                        pad_boundary_only)
+from repro.core.halo import (HaloAxis, assemble_region, exchange_blocks,
+                             exchange_multi, iter_block_keys)
+
+
+# -- transfer schedule (fill-only axes run anywhere) ---------------------------
+
+@pytest.mark.parametrize("boundary", list(Boundary))
+def test_exchange_multi_matches_chained_pads(boundary):
+    x = jnp.arange(20.0).reshape(4, 5)
+    axes = [HaloAxis(0, 2, None), HaloAxis(1, 1, None)]
+    got = exchange_multi(x, axes, boundary=boundary, constant=7.0)
+    ref = pad_boundary_only(x, axis=0, width=2, boundary=boundary,
+                            constant=7.0)
+    ref = pad_boundary_only(ref, axis=1, width=1, boundary=boundary,
+                            constant=7.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref))
+
+
+def test_exchange_multi_three_axes():
+    x = jnp.arange(24.0).reshape(2, 3, 4)
+    axes = [HaloAxis(0, 1, None), HaloAxis(1, 1, None), HaloAxis(2, 2, None)]
+    got = exchange_multi(x, axes, boundary=Boundary.LINEAR)
+    ref = x
+    for a in axes:
+        ref = pad_boundary_only(ref, axis=a.axis, width=a.width,
+                                boundary=Boundary.LINEAR)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref))
+
+
+def test_assemble_region_is_slice_of_full():
+    x = jnp.arange(20.0).reshape(4, 5)
+    axes = [HaloAxis(0, 1, None), HaloAxis(1, 2, None)]
+    blocks = exchange_blocks(x, axes, boundary=Boundary.LINEAR)
+    full = assemble_region(blocks, axes, [(0, 6), (0, 9)])
+    for ranges in ([(0, 3), (2, 9)], [(1, 5), (0, 4)], [(5, 6), (7, 9)],
+                   [(1, 5), (2, 7)]):
+        sub = assemble_region(blocks, axes, ranges)
+        (r0, r1) = ranges
+        np.testing.assert_allclose(
+            np.asarray(sub), np.asarray(full)[r0[0]:r0[1], r1[0]:r1[1]])
+
+
+def test_iter_block_keys_phase_structure():
+    axes2 = [HaloAxis(0, 1, None), HaloAxis(1, 1, None)]
+    keys2 = list(iter_block_keys(axes2))
+    assert len(keys2) == 8  # 4 edge strips + 4 corners
+    assert sorted({p for p, _ in keys2}) == [1, 2]
+    assert all(len(k) == p for p, k in keys2)  # phase == corner order
+
+    axes3 = [HaloAxis(0, 1, None), HaloAxis(1, 1, None), HaloAxis(2, 1, None)]
+    assert len(list(iter_block_keys(axes3))) == 3 ** 3 - 1
+
+    # zero-width axes contribute no blocks but keep key indices aligned
+    axes_gap = [HaloAxis(0, 1, None), HaloAxis(1, 0, None),
+                HaloAxis(2, 1, None)]
+    keys = list(iter_block_keys(axes_gap))
+    assert len(keys) == 8
+    assert all(j != 1 for _, k in keys for j, _ in k)
+
+
+# -- plan introspection --------------------------------------------------------
+
+def _stencil_graph(overlap, halo=(1, 1), size=(8, 6), partition=()):
+    src = DistTensor("src", size, partition=partition, halo=halo)
+    dst = DistTensor("dst", size, partition=partition)
+
+    def sten(s, d):
+        n0, n1 = s.shape[0] - 2 * halo[0], s.shape[1] - 2 * halo[1]
+        return s[2 * halo[0]:, 2 * halo[1]:][:n0, :n1]
+
+    g = Graph()
+    g.split(sten, concurrent_padded_access(src), dst, overlap=overlap)
+    return g
+
+
+def test_plan_lists_scheduled_transfers_per_segment():
+    ex = Executor(_stencil_graph(overlap=False))
+    ht = ex.plan.transfers_for_segment(0)
+    # 2 haloed dims, no mesh -> 4 fill strips + 4 fill corners
+    assert len(ht) == 8
+    assert all(h.mesh_axis is None and not h.overlapped for h in ht)
+    assert {h.phase for h in ht} == {1, 2}
+    assert {h.block for h in ht if h.phase == 2} == {
+        ((0, "low"), (1, "low")), ((0, "low"), (1, "high")),
+        ((0, "high"), (1, "low")), ((0, "high"), (1, "high"))}
+    assert "fill" in ht[0].describe()
+    assert ex.plan.describe_transfers().count("\n") >= 7
+
+
+def test_overlap_fallback_recorded_without_mesh():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # benign fallback must NOT warn
+        ex = Executor(_stencil_graph(overlap=True))
+    fb = ex.plan.overlap_fallbacks
+    assert len(fb) == 1
+    assert fb[0].segment == 0
+    assert "no mesh" in fb[0].reason
+
+
+def test_overlap_fallback_single_shard_mesh_is_silent():
+    mesh = make_mesh((1,), ("gx",))
+    g = _stencil_graph(overlap=True, partition=("gx", None))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ex = Executor(g, mesh=mesh)
+    fb = ex.plan.overlap_fallbacks
+    assert len(fb) == 1
+    assert "no mesh-partitioned halo axis" in fb[0].reason
+
+
+def test_overlap_fallback_no_padded_arg_warns_once():
+    mesh = make_mesh((1,), ("gx",))
+    x = DistTensor("x", (8,), partition=("gx",))
+    g = Graph()
+    g.split(lambda xs: xs + 1.0, x, writes=(0,), overlap=True)
+    with pytest.warns(RuntimeWarning, match="falls back to synchronous"):
+        ex = Executor(g, mesh=mesh)
+    assert len(ex.plan.overlap_fallbacks) == 1
+    assert "no padded-access" in ex.plan.overlap_fallbacks[0].reason
+    # warn ONCE: re-lowering the same node (e.g. a rebuilt executor) is quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ex2 = Executor(g, mesh=mesh)
+    assert len(ex2.plan.overlap_fallbacks) == 1
+
+
+def test_overlap_fallback_still_computes_correctly():
+    """A declined overlap request lowers through the synchronous path and
+    produces the same values as overlap=False."""
+    outs = {}
+    for overlap in (False, True):
+        g = _stencil_graph(overlap=overlap)
+        ex = Executor(g)
+        x0 = jnp.arange(48.0).reshape(8, 6)
+        st = ex.init_state(src=x0)
+        outs[overlap] = np.asarray(ex(st)["dst"])
+    np.testing.assert_allclose(outs[True], outs[False])

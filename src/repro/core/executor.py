@@ -4,9 +4,15 @@ The paper schedules graph nodes dynamically with a heterogeneous
 work-stealing pool.  Under SPMD/XLA that role collapses into *lowering
 decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
 
-* consecutive device levels are fused into one jit *segment* so XLA's
-  latency-hiding scheduler can overlap collectives with compute across the
-  paper's level boundaries (the paper's "compact GPU pipelines");
+* graph nodes are scheduled from their real data dependencies
+  (``core/schedule.py``): the dependency DAG's antichains of independent
+  device nodes fuse into shared waves and consecutive waves into one jit
+  *segment*, so XLA's latency-hiding scheduler can overlap independent
+  nodes, their collectives, and compute across the paper's level
+  boundaries (the paper's "compact GPU pipelines");
+  ``Executor(schedule="sequential")`` is the legacy program-order
+  lowering, and ``Executor.plan.describe_dag()`` renders the DAG, its
+  segment/wave placement, and the transfers hoisted to segment entries;
 * a segment with partitioned tensors is lowered through one ``shard_map``
   — the paper's one-node-per-partition becomes one program per shard;
 * ``concurrent_padded_access`` + ``overlap=True`` splits the stencil into
@@ -44,6 +50,7 @@ decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
 
 from __future__ import annotations
 
+import math
 import warnings
 from contextlib import contextmanager
 from dataclasses import dataclass, field as dfield
@@ -52,13 +59,16 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map_compat
 from . import halo as halo_lib
-from .graph import AccessMode, ExecutionKind, Graph, Node, TensorArg
+from . import schedule as schedule_lib
+from .graph import AccessMode, Graph, Node, TensorArg
 from .layout import Layout, RecordArray, relayout
+from .schedule import ScheduleDag
 from .tensor import DistTensor, ReductionResult
 
 __all__ = ["Executor", "execute", "make_mesh", "LayoutPlan", "RelayoutStep",
@@ -123,6 +133,16 @@ def _slice(x, axis, start, size):
     return x[tuple(idx)]
 
 
+def _shard_storage_shape(t: DistTensor,
+                         mesh: Optional[Mesh]) -> tuple[int, ...]:
+    """Per-shard storage shape of ``t``'s state entry (for transfer-block
+    byte accounting)."""
+    space = t.space if mesh is None else t.shard_space(mesh)
+    if not t.is_record:
+        return space
+    return RecordArray.storage_shape(t.spec, space, t.layout)
+
+
 # -- layout solver (paper §4.2 as a per-segment compiler pass) -----------------
 
 @dataclass(frozen=True)
@@ -156,6 +176,7 @@ class HaloTransfer:
     mesh_axis: Optional[str]
     width: int
     overlapped: bool
+    nbytes: int = 0                      # per-shard block payload size
 
     def describe(self) -> str:
         where = "+".join(f"{'-' if s == 'low' else '+'}d{d}"
@@ -185,16 +206,25 @@ class LayoutPlan:
     ``relayouts`` are the boundary conversions of one sequential pass.
     ``halo_transfers`` lists every scheduled halo block per segment
     (:meth:`transfers_for_segment`), ``overlap_fallbacks`` every declined
-    overlap request with its reason — both filled in by the Executor."""
+    overlap request with its reason — both filled in by the Executor.
+    ``dag`` is the graph's dependency DAG with its segment placement
+    (``core/schedule.py``); :meth:`describe_dag` renders it together with
+    the relayout steps and halo blocks hoisted to each segment entry."""
 
     per_segment: list[dict[str, Layout]] = dfield(default_factory=list)
     initial: dict[str, Layout] = dfield(default_factory=dict)
     relayouts: list[RelayoutStep] = dfield(default_factory=list)
     halo_transfers: list[HaloTransfer] = dfield(default_factory=list)
     overlap_fallbacks: list[OverlapFallback] = dfield(default_factory=list)
+    dag: Optional[ScheduleDag] = None
 
     def transfers_for_segment(self, segment: int) -> list[HaloTransfer]:
         return [h for h in self.halo_transfers if h.segment == segment]
+
+    def describe_dag(self) -> str:
+        if self.dag is None:
+            return "(no dependency DAG recorded)"
+        return self.dag.describe(plan=self)
 
     def describe_transfers(self) -> str:
         if not self.halo_transfers:
@@ -380,19 +410,44 @@ def _decide_overlap(node: Node, mesh: Optional[Mesh], eff) -> _OverlapDecision:
 
 
 class Executor:
-    """Compile + run a Graph against an optional mesh."""
+    """Compile + run a Graph against an optional mesh.
+
+    ``schedule`` selects how graph nodes become jit segments:
+
+    * ``"dag"`` (default) — dependency-DAG scheduling
+      (``core/schedule.py``): antichains of independent device nodes fuse
+      into shared waves/segments, and host / loop nodes break the chain
+      only where a dependency path forces it;
+    * ``"sequential"`` — the legacy program-order lowering (every level a
+      barrier, every host node a break) — the escape hatch and the
+      reference semantics the property tests compare against.
+
+    Both schedules produce bitwise-identical state for any valid graph;
+    the DAG schedule just gives XLA more to overlap per dispatch.
+    """
 
     def __init__(self, graph: Graph, mesh: Optional[Mesh] = None,
                  donate: bool = True,
-                 layout_overrides: Optional[dict[str, Layout]] = None):
+                 layout_overrides: Optional[dict[str, Layout]] = None,
+                 schedule: str = "dag"):
+        if schedule not in ("dag", "sequential"):
+            raise ValueError(
+                f"schedule must be 'dag' or 'sequential', got {schedule!r}")
         self.graph = graph
         self.mesh = mesh
         self.donate = donate
+        self.schedule = schedule
         self.tensors = graph.all_tensors()
         self.results = graph.all_results()
-        self._segments = self._build_segments(graph)
+        self.dag = schedule_lib.build_dag(graph)
+        if schedule == "dag":
+            self._segments = schedule_lib.dag_segments(self.dag)
+        else:
+            self._segments = schedule_lib.sequential_segments(graph)
+            schedule_lib.place_units(self.dag, self._segments)
         self.plan = solve_layouts(self._segments, self.tensors,
                                   overrides=layout_overrides)
+        self.plan.dag = self.dag
         # physical layout of each record tensor's state entry right now
         self._state_layouts: dict[str, Layout] = dict(self.plan.initial)
         if mesh is not None:
@@ -445,17 +500,22 @@ class Executor:
                 for _, t, mode in node.tensor_args():
                     if not mode.padded:
                         continue
-                    entries = _halo_plan(eff(t), mesh)
+                    eff_t = eff(t)
+                    entries = _halo_plan(eff_t, mesh)
                     if not entries:
                         continue
                     axes = _halo_axes(entries)
+                    shard = _shard_storage_shape(eff_t, mesh)
+                    itemsize = np.dtype(eff_t.dtype).itemsize
                     for phase, bkey in halo_lib.iter_block_keys(axes):
                         last, _side = bkey[-1]
+                        shape = halo_lib.block_shape(shard, axes, bkey)
                         self.plan.halo_transfers.append(HaloTransfer(
                             si, node.name, t.name, phase,
                             tuple((entries[j].dim, s) for j, s in bkey),
                             entries[last].mesh_axis, entries[last].width,
-                            overlapped))
+                            overlapped,
+                            nbytes=math.prod(shape) * itemsize))
 
     # -- layout plumbing ---------------------------------------------------
     def _eff(self, t: DistTensor) -> DistTensor:
@@ -577,58 +637,12 @@ class Executor:
         tensor's current physical layout; accessors hide the difference)."""
         return self._eff(t).wrap(state[t.name])
 
-    # -- segmentation ------------------------------------------------------
-    def _build_segments(self, graph: Graph):
-        """Split levels into host/device segments.
-
-        Returns a list of ('device', [levels...]) / ('host', node) /
-        ('loop', subgraph) entries.  Subgraphs without conditions are
-        inlined into the level stream.
-        """
-        segments: list[tuple[str, Any]] = []
-        device_levels: list[list[Node]] = []
-
-        def flush():
-            nonlocal device_levels
-            if device_levels:
-                segments.append(("device", device_levels))
-                device_levels = []
-
-        def walk(g: Graph):
-            nonlocal device_levels
-            for level in g.levels:
-                dev_nodes: list[Node] = []
-                for node in level:
-                    if node.kind == "subgraph":
-                        if dev_nodes:
-                            device_levels.append(dev_nodes)
-                            dev_nodes = []
-                        walk(node.subgraph)
-                    elif node.kind == "loop":
-                        if dev_nodes:
-                            device_levels.append(dev_nodes)
-                            dev_nodes = []
-                        if node.subgraph.is_device_only():
-                            flush()
-                            segments.append(("loop", node.subgraph))
-                        else:
-                            flush()
-                            segments.append(("host_loop", node.subgraph))
-                    elif node.kind == "sync" or node.exec_kind is ExecutionKind.Cpu:
-                        if dev_nodes:
-                            device_levels.append(dev_nodes)
-                            dev_nodes = []
-                        flush()
-                        segments.append(("host", node))
-                    else:
-                        dev_nodes.append(node)
-                if dev_nodes:
-                    device_levels.append(dev_nodes)
-            return
-
-        walk(graph)
-        flush()
-        return segments
+    # -- schedule introspection -------------------------------------------
+    def describe_dag(self) -> str:
+        """Render the dependency DAG, its segment/wave placement under the
+        active schedule, and the relayouts / halo blocks hoisted to each
+        segment entry (see ``core/schedule.py``)."""
+        return self.plan.describe_dag()
 
     # -- node lowering (called inside shard_map / plain trace) ----------------
     def _resolve_args(self, node: Node, state: dict, sharded: bool):
@@ -875,7 +889,8 @@ class Executor:
         # the sub-executor must agree with the enclosing plan: layouts are
         # loop-invariant inside one compiled while body
         sub_exec = Executor(sub, self.mesh, donate=False,
-                            layout_overrides=self.plan.per_segment[seg])
+                            layout_overrides=self.plan.per_segment[seg],
+                            schedule=self.schedule)
         sharded = self.mesh is not None and any(
             ax is not None for t in sub_exec.tensors.values()
             for ax in t.partition)
@@ -945,7 +960,8 @@ class Executor:
             elif kind == "host_loop":
                 sub_exec = Executor(
                     payload, self.mesh, donate=False,
-                    layout_overrides=self.plan.per_segment[i])
+                    layout_overrides=self.plan.per_segment[i],
+                    schedule=self.schedule)
                 # while semantics: check before the first iteration too
                 while bool(jax.device_get(payload.condition(state))):
                     state = sub_exec(state)
@@ -964,8 +980,11 @@ class Executor:
         are compiled as one fori_loop."""
         if steps <= 0:
             return state
-        if (self.graph.is_device_only() and self.graph.condition is None
-                and all(k == "device" for k, _ in self._segments)):
+        # the scheduler owns the fusability decision: only a DAG with no
+        # host / sync / loop vertex lowers every segment to device code,
+        # whatever the schedule mode (a host node anywhere must run
+        # between jit calls every step, so it breaks the fori fusion)
+        if self.graph.condition is None and self.dag.device_only:
             return self._run_fused(state, steps)
         with self._layout_epoch():
             for _ in range(steps):

@@ -45,6 +45,7 @@ __all__ = [
     "exchange_blocks",
     "exchange_multi",
     "assemble_region",
+    "block_shape",
     "iter_block_keys",
     "halo_blocks",
     "pad_boundary_only",
@@ -228,6 +229,22 @@ def iter_block_keys(axes: Sequence[HaloAxis]):
                     yield phase, k
                     nxt.append(k)
         frontier = nxt
+
+
+def block_shape(
+    shape: Sequence[int], axes: Sequence[HaloAxis], key: BlockKey
+) -> tuple[int, ...]:
+    """Shape of the halo block ``key`` for a shard of ``shape``.
+
+    Along every axis the key extends, the block is ``width`` cells thick;
+    along every other axis it spans the shard.  The executor uses this for
+    per-block byte accounting (``HaloTransfer.nbytes``), which the DAG
+    schedule surfaces as the traffic hoisted to each segment entry.
+    """
+    out = list(shape)
+    for j, _side in key:
+        out[axes[j].axis] = axes[j].width
+    return tuple(out)
 
 
 def _block_pair(

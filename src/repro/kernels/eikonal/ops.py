@@ -1,6 +1,7 @@
 """Jitted public wrapper + graph builder for the eikonal FIM sweep."""
 
 from functools import partial
+from typing import Optional
 
 import jax
 
@@ -31,6 +32,7 @@ def make_eikonal_graph(
     use_pallas: bool = False,
     block=(8, 128),
     interpret: bool = True,
+    graph: Optional[Graph] = None,
 ) -> Graph:
     """One outer FIM sweep as a Ripple graph node: ``phi`` (halo ``(1, 1)``,
     possibly 2-D partitioned) updated in place, ``source_mask`` riding as
@@ -46,6 +48,10 @@ def make_eikonal_graph(
     work) is decomposition-invariant and value-identical between the
     overlapped and synchronous lowerings; with ``inner > 1`` the caller
     must pick a ``block`` that tiles every strip extent.
+
+    ``graph=`` appends the sweep node to an existing builder (see
+    ``make_flux_difference_graph``) so independent kernel nodes can share
+    one DAG-scheduled jit segment.
     """
     from .kernel import godunov_update
 
@@ -55,7 +61,7 @@ def make_eikonal_graph(
         return eikonal_fim_sweep(p_haloed, m, h, inner=inner, block=block,
                                  use_pallas=use_pallas, interpret=interpret)
 
-    g = Graph(name="eikonal_sweep")
+    g = graph if graph is not None else Graph(name="eikonal_sweep")
     g.split(sweep, exclusive_padded_access(phi), mask, writes=(0,),
             overlap=overlap)
     return g

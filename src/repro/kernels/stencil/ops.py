@@ -9,6 +9,7 @@ are numerically identical under all three layouts.
 """
 
 from functools import partial
+from typing import Optional
 
 import jax
 
@@ -41,6 +42,7 @@ def make_flux_difference_graph(
     use_pallas: bool = False,
     block=(8, 128),
     interpret: bool = True,
+    graph: Optional[Graph] = None,
 ) -> Graph:
     """One-node Ripple graph: FORCE flux difference over a (possibly
     2-D-partitioned) Euler record ``u`` with halo ``(1, 1)`` into ``out``.
@@ -52,12 +54,17 @@ def make_flux_difference_graph(
     (boundary strips are 1 cell thin), so the default here is the
     shape-polymorphic reference path — flip ``use_pallas`` where the
     interior extents divide ``block``.
+
+    ``graph=`` appends the node to an existing builder instead of
+    creating a fresh one: compose several kernel nodes into one graph and
+    the dependency-DAG scheduler fuses the independent ones into a shared
+    jit segment (``core/schedule.py``).
     """
 
     def flux_node(rec, _out):
         return flux_difference(rec, lam_x, lam_y, block=block,
                                use_pallas=use_pallas, interpret=interpret)
 
-    g = Graph(name="flux_difference")
+    g = graph if graph is not None else Graph(name="flux_difference")
     g.split(flux_node, concurrent_padded_access(u), out, overlap=overlap)
     return g

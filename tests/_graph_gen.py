@@ -1,0 +1,107 @@
+"""Random small Ripple graphs of saxpy / stencil / reduce nodes.
+
+Shared by the in-process property tests (tests/test_schedule_dag.py) and
+the multi-device subprocess equivalence tests — no pytest imports here so
+the subprocess children can import it with a bare ``sys.path`` insert.
+
+The generator is deterministic per seed: the same (seed, layout,
+partition) always builds the same graph and the same initial state, so a
+failure reproduces exactly.
+"""
+
+from __future__ import annotations
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Boundary, DistTensor, Graph, Layout, MaxReducer,
+                        RecordArray, RecordSpec, SumReducer,
+                        concurrent_padded_access, make_reduction_result)
+
+SPEC = RecordSpec.create("x", "y")
+NX, NY = 16, 12
+N_SCALARS = 3
+
+
+def make_tensors(layout: Layout, partition=()):
+    scalars = [
+        DistTensor(f"t{i}", (NX, NY), partition=partition, halo=(1, 1),
+                   boundary=Boundary.TRANSMISSIVE)
+        for i in range(N_SCALARS)
+    ]
+    rec = DistTensor("r", (NX, NY), spec=SPEC, layout=layout,
+                     partition=partition)
+    return scalars, rec
+
+
+def _stencil(s, _d):
+    # (m+2, n+2) -> (m, n) five-point combination (shape-polymorphic)
+    return (s[2:, 1:-1] + s[:-2, 1:-1] + s[1:-1, 2:] + s[1:-1, :-2]
+            - 3.5 * s[1:-1, 1:-1])
+
+
+def build_random_graph(seed: int, layout: Layout, partition=()):
+    """A 2-4 level graph, 1-3 nodes per level, drawn from the pool
+    {scalar saxpy, 2-d stencil, reduce, record saxpy, result broadcast}.
+
+    Returns ``(graph, overrides, state_keys)``: pass ``overrides`` to
+    ``Executor.init_state`` (fresh arrays each call — donation-safe) and
+    compare the ``state_keys`` entries between schedules.
+    """
+    rng = random.Random(seed)
+    scalars, rec = make_tensors(layout, partition)
+    results = []
+    g = Graph(name=f"rand{seed}")
+
+    for li in range(rng.randint(2, 4)):
+        if li:
+            g._new_level()
+        for _ in range(rng.randint(1, 3)):
+            kind = rng.choice(
+                ["saxpy", "stencil", "reduce", "rec", "result_add"])
+            if kind == "saxpy":
+                a, b = rng.sample(range(N_SCALARS), 2)
+                c = round(rng.uniform(0.5, 2.0), 3)
+                g.split((lambda cc: lambda xs, ys: cc * xs + ys)(c),
+                        scalars[a], scalars[b])
+            elif kind == "stencil":
+                a, b = rng.sample(range(N_SCALARS), 2)
+                g.split(_stencil, concurrent_padded_access(scalars[a]),
+                        scalars[b])
+            elif kind == "reduce":
+                i = rng.randrange(N_SCALARS)
+                res = make_reduction_result(f"res{len(results)}_{seed}")
+                results.append(res)
+                g.reduce(scalars[i], res,
+                         rng.choice([SumReducer(), MaxReducer()]))
+            elif kind == "rec":
+                c = round(rng.uniform(0.5, 2.0), 3)
+                g.split((lambda cc: lambda r: r.set_field(
+                    "y", cc * r.field("x") + r.field("y")))(c),
+                    rec, writes=(0,))
+            elif results:  # result_add: broadcast a reduction back in
+                res = rng.choice(results)
+                i = rng.randrange(N_SCALARS)
+                g.split(lambda xs, rv: xs + 0.125 * rv, scalars[i], res)
+
+    def overrides():
+        """Fresh arrays every call (executors donate their state)."""
+        out = {
+            f"t{i}": jnp.asarray(
+                np.linspace(0.0, 1.0 + i, NX * NY, dtype=np.float32)
+                .reshape(NX, NY))
+            for i in range(N_SCALARS)
+        }
+        out["r"] = RecordArray.from_fields(
+            SPEC,
+            {"x": jnp.asarray(np.linspace(-1.0, 1.0, NX * NY,
+                                          dtype=np.float32).reshape(NX, NY)),
+             "y": jnp.asarray(np.full((NX, NY), 0.25, dtype=np.float32))},
+            layout)
+        return out
+
+    # only tensors the graph actually references get state entries
+    keys = sorted(g.all_tensors()) + [r.name for r in results]
+    return g, overrides, keys

@@ -1,0 +1,142 @@
+"""Golden kernel-vs-ref matrix: every kernel package in
+``src/repro/kernels/*`` against its pure-jnp ``ref.py`` oracle over the
+full layout (AoS / SoA / AoSoA, for record kernels) × dtype (f32 / bf16)
+grid.  The per-kernel suites in test_kernels.py spot-check shapes and
+single combinations; this module owns the exhaustive grid so no layout or
+dtype column is silently untested."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Boundary, Layout, RecordArray, pad_boundary_only,
+                        relayout)
+
+LAYOUTS = [Layout.AOS, Layout.SOA, Layout.AOSOA]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype, f32=1e-5, bf16=2e-2):
+    return f32 if dtype == jnp.float32 else bf16
+
+
+def _assert_close(out, ref, tol):
+    o = out.data if isinstance(out, RecordArray) else out
+    r = ref.data if isinstance(ref, RecordArray) else ref
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# -- saxpy (flat + record) ----------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_golden_saxpy(rng, dtype):
+    from repro.kernels.saxpy.ops import saxpy
+    from repro.kernels.saxpy.ref import saxpy_ref
+    x = jnp.asarray(rng.standard_normal(2048), dtype)
+    y = jnp.asarray(rng.standard_normal(2048), dtype)
+    _assert_close(saxpy(1.75, x, y), saxpy_ref(1.75, x, y), _tol(dtype))
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_golden_saxpy_record(rng, layout, dtype):
+    from repro.kernels.saxpy.kernel import SAXPY_SPEC
+    from repro.kernels.saxpy.ops import saxpy_record
+    from repro.kernels.saxpy.ref import saxpy_record_ref
+    rec = RecordArray.from_fields(
+        SAXPY_SPEC,
+        {"x": jnp.asarray(rng.standard_normal(1024), dtype),
+         "y": jnp.asarray(rng.standard_normal(1024), dtype)},
+        layout)
+    out = saxpy_record(rec, 2.5, block=1024)
+    assert out.layout is layout and out.dtype == dtype
+    _assert_close(out, saxpy_record_ref(rec, 2.5), _tol(dtype))
+
+
+# -- particle ------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_golden_particle(rng, layout, dtype):
+    from repro.kernels.particle.ops import (PARTICLE_SPEC, particle_update,
+                                            particle_update_ref)
+    rec = RecordArray.from_fields(
+        PARTICLE_SPEC,
+        {"x": jnp.asarray(rng.standard_normal((512, 3)), dtype),
+         "v": jnp.asarray(rng.standard_normal((512, 3)), dtype)},
+        layout)
+    out = particle_update(rec, 0.25, block=256)
+    assert out.layout is layout and out.dtype == dtype
+    _assert_close(out, particle_update_ref(rec, 0.25), _tol(dtype))
+
+
+# -- stencil (FORCE flux) ------------------------------------------------------
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_golden_flux(layout, dtype):
+    from repro.kernels.stencil.ops import flux_difference, flux_difference_ref
+    from repro.physics.euler import EULER_SPEC, shock_bubble_init
+    d = shock_bubble_init(32, 16).astype(dtype)
+    for ax in (1, 2):
+        d = pad_boundary_only(d, axis=ax, width=1,
+                              boundary=Boundary.TRANSMISSIVE)
+    hal = relayout(RecordArray(d, EULER_SPEC, Layout.SOA), layout)
+    out = flux_difference(hal, 0.1, 0.1)
+    assert out.layout is layout and out.dtype == dtype
+    _assert_close(out, flux_difference_ref(hal, 0.1, 0.1),
+                  _tol(dtype, f32=1e-4))
+
+
+# -- eikonal (scalar field: no layout axis) ------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_golden_eikonal(dtype):
+    from repro.kernels.eikonal.ops import eikonal_fim_ref, eikonal_fim_sweep
+    n = 32
+    phi = jnp.full((n, n), 1e3, dtype)
+    src = jnp.zeros((n, n), bool).at[n // 2, n // 2].set(True)
+    phi = jnp.where(src, jnp.zeros((), dtype), phi)
+    ph = pad_boundary_only(pad_boundary_only(phi, axis=0, width=1),
+                           axis=1, width=1)
+    out = eikonal_fim_sweep(ph, src, 1.0 / n)
+    assert out.dtype == dtype
+    _assert_close(out, eikonal_fim_ref(ph, src, 1.0 / n),
+                  _tol(dtype, bf16=5e-2))
+
+
+# -- attention -----------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_golden_flash_attention(rng, dtype):
+    from repro.kernels.attention.ops import flash_attention, mha_ref
+    b, h, hkv, s, d = 2, 4, 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)) * 0.3, dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)) * 0.3, dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)) * 0.3, dtype)
+    out = flash_attention(q, k, v, causal=True)
+    assert out.dtype == dtype
+    _assert_close(out, mha_ref(q, k, v, causal=True),
+                  _tol(dtype, f32=2e-3))
+
+
+# -- ssd -----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_golden_ssd(rng, dtype):
+    from repro.kernels.ssd.ops import ssd, ssd_naive
+    b, s, h, dh, ds = 2, 128, 2, 16, 8
+    x = jnp.asarray(rng.standard_normal((b, s, h, dh)) * 0.3, dtype)
+    dt = jnp.asarray(
+        np.log1p(np.exp(rng.standard_normal((b, s, h)))), dtype)
+    A = -jnp.exp(jnp.asarray(rng.standard_normal(h), jnp.float32))
+    B = jnp.asarray(rng.standard_normal((b, s, ds)) * 0.3, dtype)
+    C = jnp.asarray(rng.standard_normal((b, s, ds)) * 0.3, dtype)
+    D = jnp.asarray(rng.standard_normal(h), jnp.float32)
+    y, st = ssd(x, dt, A, B, C, D, chunk=32)
+    y_ref, st_ref = ssd_naive(x, dt, A, B, C, D)
+    assert y.dtype == dtype
+    _assert_close(y, y_ref, _tol(dtype, f32=2e-3))
+    _assert_close(st, st_ref, _tol(dtype, f32=2e-3, bf16=2e-2))

@@ -1,0 +1,182 @@
+"""Per-step dispatch overhead: region-compiled execution vs per-segment
+dispatch (paper §5.3 / Fig. 13 — graphs are built once, executed many).
+
+Measures, for 1/4/16-segment relayout-heavy graphs:
+
+* ``base_ms_per_step`` — the pre-region serving loop: one
+  ``Executor(schedule="sequential", regions=False)`` call per step, i.e.
+  one jit dispatch per segment plus eager Python relayout glue between
+  segments;
+* ``region_ms_per_step`` — ``Executor.run(steps)`` with the region
+  compiler (default): one cached executable per region per step, the
+  relayouts traced inside, and the fused dynamic-``steps`` fori path for
+  the device-only 1-segment graph;
+* trace counts — steady-state ``run()`` must add ZERO traces (hard
+  assertion; this is the CI perf-smoke gate), and a re-instantiated
+  Executor over an identical graph must reuse every cached executable
+  with zero new traces (the plan-signature cache serving pattern).
+
+``--json BENCH_4.json`` writes the row data — the first entry in the
+tracked BENCH trajectory.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DistTensor, Executor, Graph, Layout, RecordSpec
+
+from .common import Csv
+
+SPEC = RecordSpec.create("a", "b")
+
+
+def _bump_a(r):
+    return r.set_field("a", r.field("a") + 1.0)
+
+
+def _accum_b(r):
+    return r.set_field("b", r.field("b") + 0.5 * r.field("a"))
+
+
+def _reset_flag(f):
+    return jnp.zeros_like(f)
+
+
+def _set_flag(f):
+    return jnp.ones_like(f)
+
+
+def build_chain(n_segments: int, n: int = 4096) -> Graph:
+    """A relayout-heavy ``device, loop, device, loop, ...`` chain of
+    ``n_segments`` jit segments over one record tensor: device segments
+    prefer AoS, loop bodies prefer SoA, so every segment boundary carries
+    an explicit relayout step.  Each loop is flag-gated to run exactly
+    once per pass (its preceding device segment resets the flag), which
+    keeps the loop vertices in the schedule without changing semantics.
+    All functions are module-level, so a rebuilt graph has an identical
+    plan signature (the serving re-instantiation pattern)."""
+    r = DistTensor("r", (n,), spec=SPEC, layout=Layout.AOS)
+    g = Graph(name=f"chain{n_segments}")
+    if n_segments == 1:
+        g.split(_bump_a, r, writes=(0,), layout=Layout.AOS)
+        g.then_split(_accum_b, r, writes=(0,), layout=Layout.AOS)
+        return g
+    assert n_segments % 2 == 0, "multi-segment chains alternate device/loop"
+    for i in range(n_segments // 2):
+        f = DistTensor(f"f{i}", (1,))
+        g.then_split(_bump_a, r, writes=(0,), layout=Layout.AOS)
+        g.split(_reset_flag, f, writes=(0,))
+        loop = Graph(name=f"loop{i}")
+        loop.split(_accum_b, r, writes=(0,), layout=Layout.SOA)
+        loop.split(_set_flag, f, writes=(0,))
+        loop.conditional((lambda nm: lambda s: s[nm][0] < 0.5)(f"f{i}"))
+        g.then(loop)
+    return g
+
+
+def _time_loop(step_fn, state, steps: int):
+    """(ms_per_step, final_state) for a warmed step driver."""
+    t0 = time.perf_counter()
+    state = step_fn(state, steps)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state))
+    return (time.perf_counter() - t0) / steps * 1e3, state
+
+
+def bench_one(n_segments: int, steps: int, n: int = 4096) -> dict:
+    # -- baseline: per-segment dispatch, one __call__ per step --------------
+    ex_b = Executor(build_chain(n_segments, n), donate=False,
+                    schedule="sequential", regions=False)
+
+    def base_step(state, k):
+        for _ in range(k):
+            state = ex_b(state)
+        return state
+
+    st = ex_b.init_state()
+    t0 = time.perf_counter()
+    st = base_step(st, 1)
+    jax.block_until_ready(jax.tree_util.tree_leaves(st))
+    base_first = (time.perf_counter() - t0) * 1e3
+    base_ms, st = _time_loop(base_step, st, steps)
+
+    # -- region compiler: run(steps) over cached executables ----------------
+    ex_r = Executor(build_chain(n_segments, n), donate=False)
+    st = ex_r.init_state()
+    t0 = time.perf_counter()
+    st = ex_r.run(st, 1)
+    jax.block_until_ready(jax.tree_util.tree_leaves(st))
+    region_first = (time.perf_counter() - t0) * 1e3
+    st = ex_r.run(st, 2)                   # warm the steady entry layouts
+    warm = ex_r.cache_stats()
+    region_ms, st = _time_loop(ex_r.run, st, steps)
+    # a second run with a DIFFERENT step count must not retrace either
+    # (regression: the fused fori path used to close over ``steps``)
+    st = ex_r.run(st, steps + 3)
+    steady_traces = ex_r.cache_stats()["trace_events"] - warm["trace_events"]
+
+    # -- serving pattern: a re-instantiated Executor reuses everything ------
+    before = ex_r.cache_stats()
+    ex_2 = Executor(build_chain(n_segments, n), donate=False)
+    st2 = ex_2.run(ex_2.init_state(), 3)
+    jax.block_until_ready(jax.tree_util.tree_leaves(st2))
+    after = ex_2.cache_stats()
+    reinst_traces = after["trace_events"] - before["trace_events"]
+    reinst_hits = after["hits"] - before["hits"]
+
+    return dict(
+        segments=n_segments, steps=steps,
+        base_first_ms=base_first, base_ms_per_step=base_ms,
+        region_first_ms=region_first, region_ms_per_step=region_ms,
+        speedup=base_ms / max(region_ms, 1e-9),
+        steady_new_traces=steady_traces,
+        reinstantiation_new_traces=reinst_traces,
+        reinstantiation_cache_hits=reinst_hits,
+    )
+
+
+def main(sizes=(1, 4, 16), steps: int = 30, n: int = 4096,
+         json_path=None) -> list[dict]:
+    csv = Csv("segments", "base_first_ms", "base_ms_per_step",
+              "region_first_ms", "region_ms_per_step", "speedup",
+              "steady_new_traces", "reinst_new_traces", "reinst_hits")
+    rows = []
+    for n_segments in sizes:
+        r = bench_one(n_segments, steps, n)
+        rows.append(r)
+        csv.row(r["segments"], r["base_first_ms"], r["base_ms_per_step"],
+                r["region_first_ms"], r["region_ms_per_step"], r["speedup"],
+                r["steady_new_traces"], r["reinstantiation_new_traces"],
+                r["reinstantiation_cache_hits"])
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"steps": steps, "n": n, "rows": rows,
+                       "unix_time": time.time()}, fh, indent=2)
+        print(f"[dispatch_overhead] wrote {json_path}")
+    # hard gates (CI perf-smoke): retrace-free steady state + full
+    # executable reuse across re-instantiated executors
+    bad = [r for r in rows if r["steady_new_traces"] != 0]
+    assert not bad, f"steady-state run() retraced: {bad}"
+    bad = [r for r in rows if r["reinstantiation_new_traces"] != 0]
+    assert not bad, f"re-instantiated Executor retraced: {bad}"
+    return csv.dicts()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--full", action="store_true",
+                    help="larger tensor + more steps")
+    args = ap.parse_args()
+    try:
+        main(steps=args.steps if not args.full else 100,
+             n=4096 if not args.full else 1 << 20,
+             json_path=args.json)
+    except AssertionError as exc:
+        print(f"[dispatch_overhead] FAILED: {exc}", file=sys.stderr)
+        sys.exit(1)

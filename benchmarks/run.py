@@ -22,9 +22,14 @@ def main(argv=None) -> int:
                     help="write per-suite timings/rows as JSON")
     args = ap.parse_args(argv)
 
-    from . import (fig13_scaling, table2_saxpy, table3_particle, table4_flux,
-                   table5_eikonal, table_layout)
+    from . import (dispatch_overhead, fig13_scaling, table2_saxpy,
+                   table3_particle, table4_flux, table5_eikonal,
+                   table_layout)
     jobs = [
+        ("Dispatch overhead (region compiler vs per-segment)",
+         lambda: dispatch_overhead.main(
+             steps=30 if not args.full else 100,
+             n=4096 if not args.full else 1 << 20)),
         ("Layout table (AoS/SoA/AoSoA)", lambda: table_layout.main(
             saxpy_n=1 << 18 if not args.full else 1 << 22,
             particle_n=65_536 if not args.full else 1_048_576,

@@ -13,11 +13,12 @@ import numpy as np
 from repro.analysis import analyze_hlo
 from repro.core import Layout, RecordArray
 from repro.kernels.particle.ops import PARTICLE_SPEC, particle_update
-from .common import Csv, time_fn
+from .common import Csv, time_fn_split
 
 
 def main(sizes=(100_000, 1_000_000)) -> list[dict]:
-    csv = Csv("size", "layout", "cpu_ms", "hlo_bytes", "hlo_flops")
+    csv = Csv("size", "layout", "first_call_ms", "cpu_ms", "hlo_bytes",
+              "hlo_flops")
     rng = np.random.default_rng(0)
     for n in sizes:
         fields = {"x": jnp.asarray(rng.standard_normal((n, 3),
@@ -26,12 +27,13 @@ def main(sizes=(100_000, 1_000_000)) -> list[dict]:
                                                        dtype=np.float32))}
         for layout in (Layout.SOA, Layout.AOS):
             rec = RecordArray.from_fields(PARTICLE_SPEC, fields, layout)
-            t = time_fn(particle_update, rec, 0.1, block=4096)
+            first, t = time_fn_split(particle_update, rec, 0.1, block=4096)
             comp = jax.jit(
                 lambda r: particle_update(r, 0.1, use_pallas=False)
             ).lower(rec).compile()
             a = analyze_hlo(comp.as_text())
-            csv.row(n, layout.name, t, int(a["bytes"]), int(a["flops"]))
+            csv.row(n, layout.name, first, t, int(a["bytes"]),
+                    int(a["flops"]))
     return csv.dicts()
 
 

@@ -11,7 +11,7 @@ from repro.analysis import analyze_hlo
 from repro.core import Boundary, Layout, RecordArray, pad_boundary_only
 from repro.kernels.stencil.ops import flux_difference
 from repro.physics.euler import EULER_SPEC, shock_bubble_init
-from .common import Csv, time_fn
+from .common import Csv, time_fn_split
 
 
 def _haloed(nx, ny, layout):
@@ -25,20 +25,20 @@ def _haloed(nx, ny, layout):
 
 
 def main(sizes=((256, 256), (512, 512))) -> list[dict]:
-    csv = Csv("size", "layout", "pallas_cpu_ms", "jnp_cpu_ms", "hlo_bytes",
-              "hlo_flops")
+    csv = Csv("size", "layout", "pallas_first_ms", "pallas_cpu_ms",
+              "jnp_first_ms", "jnp_cpu_ms", "hlo_bytes", "hlo_flops")
     for nx, ny in sizes:
         for layout in (Layout.SOA,):
             hal = _haloed(nx, ny, layout)
-            tp = time_fn(flux_difference, hal, 0.1, 0.1, iters=3)
-            tj = time_fn(flux_difference, hal, 0.1, 0.1, use_pallas=False,
-                         iters=3)
+            fp, tp = time_fn_split(flux_difference, hal, 0.1, 0.1, iters=3)
+            fj, tj = time_fn_split(flux_difference, hal, 0.1, 0.1,
+                                   use_pallas=False, iters=3)
             comp = jax.jit(
                 lambda h: flux_difference(h, 0.1, 0.1, use_pallas=False)
             ).lower(hal).compile()
             a = analyze_hlo(comp.as_text())
-            csv.row(f"{nx}x{ny}", layout.name, tp, tj, int(a["bytes"]),
-                    int(a["flops"]))
+            csv.row(f"{nx}x{ny}", layout.name, fp, tp, fj, tj,
+                    int(a["bytes"]), int(a["flops"]))
     return csv.dicts()
 
 

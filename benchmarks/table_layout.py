@@ -15,30 +15,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Boundary, Layout, RecordArray, pad_boundary_only, relayout
-from .common import Csv, time_fn
+from .common import Csv, time_fn, time_fn_split
 
 LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
 
 
 def _bench_kernel(csv, kernel_name, n_label, make_rec, run):
     base = make_rec(Layout.SOA)
-    ref = {k: np.asarray(v) for k, v in run(base).to_fields().items()}
-    times = {}
+    times, firsts, outs = {}, {}, {}
     for lay in LAYOUTS:
         rec = relayout(base, lay)
-        times[lay] = time_fn(run, rec)
-        got = run(rec).to_fields()
+        # nothing ran this layout yet, so 'first' is a genuinely cold
+        # trace+compile call for every column (the SoA reference is
+        # computed afterwards, from the already-warm kernel)
+        firsts[lay], times[lay] = time_fn_split(run, rec)
+        outs[lay] = run(rec).to_fields()
+    ref = {k: np.asarray(v) for k, v in outs[Layout.SOA].items()}
+    for lay in LAYOUTS:
         for name, want in ref.items():  # every field, incl. the written one
-            np.testing.assert_allclose(np.asarray(got[name]), want,
-                                       rtol=1e-4, atol=1e-5, err_msg=name)
+            np.testing.assert_allclose(np.asarray(outs[lay][name]), want,
+                                       rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{lay}:{name}")
     t_relayout = time_fn(lambda r: relayout(r, Layout.AOS).data, base)
     csv.row(kernel_name, n_label,
+            firsts[Layout.AOS], firsts[Layout.SOA], firsts[Layout.AOSOA],
             times[Layout.AOS], times[Layout.SOA], times[Layout.AOSOA],
             times[Layout.AOS] / max(times[Layout.SOA], 1e-9), t_relayout)
 
 
 def main(saxpy_n=1 << 18, particle_n=65_536, flux_shape=(128, 128)) -> list[dict]:
-    csv = Csv("kernel", "size", "aos_ms", "soa_ms", "aosoa_ms",
+    csv = Csv("kernel", "size", "aos_first_ms", "soa_first_ms",
+              "aosoa_first_ms", "aos_ms", "soa_ms", "aosoa_ms",
               "aos_over_soa", "relayout_ms")
     rng = np.random.default_rng(0)
 

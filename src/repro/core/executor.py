@@ -13,6 +13,25 @@ decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
   ``Executor(schedule="sequential")`` is the legacy program-order
   lowering, and ``Executor.plan.describe_dag()`` renders the DAG, its
   segment/wave placement, and the transfers hoisted to segment entries;
+* a **region compiler** sits on top of the segment schedule (paper §5.3:
+  graphs are built once, executed many): maximal runs of consecutive
+  device / device-loop segments are grouped into *regions*
+  (``core/schedule.py``'s ``group_regions``), each region lowers to ONE
+  jitted program — the boundary relayout steps and halo assembly are
+  traced inside it as pure functions (``core/layout.py``'s
+  ``relayout_data``, ``core/halo.py``'s exchange/assembly) instead of
+  being dispatched eagerly from Python between segment calls — and
+  compiled regions live in a process-wide executable cache keyed by a
+  structural *plan signature* (graph structure × shapes/dtypes × layouts
+  × mesh × schedule mode × donation), so a re-instantiated ``Executor``
+  over an identical graph (the serving pattern) reuses the compiled
+  executables with zero new traces.  ``run(steps)`` is retrace-free: the
+  fused fori fast path takes ``steps`` as a dynamic argument (distinct
+  step counts share one trace) and the non-fused path loops over cached
+  region executables with no eager relayout dispatch while consecutive
+  iterations agree on layout.  ``Executor(regions=False)`` is the
+  per-segment-dispatch escape hatch (and the baseline
+  ``benchmarks/dispatch_overhead.py`` measures against);
 * a segment with partitioned tensors is lowered through one ``shard_map``
   — the paper's one-node-per-partition becomes one program per shard;
 * ``concurrent_padded_access`` + ``overlap=True`` splits the stencil into
@@ -29,9 +48,12 @@ decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
 * host (Cpu) nodes and ``sync()`` break segments — the host work runs
   between jit calls (heterogeneous execution);
 * a graph with ``conditional`` becomes a ``lax.while_loop`` (device) or a
-  host do/while (if it contains host nodes);
-* state buffers are donated to each segment (the paper's allocator-reuse,
-  C6): steps update state in place;
+  host do/while (if it contains host nodes); device loops trace straight
+  into their enclosing region, host loops run a cached sub-``Executor``;
+* state buffers are donated to each region call (the paper's
+  allocator-reuse, C6): steps update state in place — only buffers whose
+  layout (hence shape) is stable across the region are donated, so XLA
+  can actually alias them;
 * a **layout solver** (paper §4.2's polymorphic layout made a compiler
   decision) assigns each record tensor a storage layout *per jit segment*:
   a user pin (``DistTensor.pin_layout``) is always honored, a node-level
@@ -50,7 +72,12 @@ decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
 
 from __future__ import annotations
 
+import enum as enum_lib
+import functools
+import hashlib
 import math
+import sys
+import types
 import warnings
 from contextlib import contextmanager
 from dataclasses import dataclass, field as dfield
@@ -67,12 +94,14 @@ from ..compat import shard_map_compat
 from . import halo as halo_lib
 from . import schedule as schedule_lib
 from .graph import AccessMode, Graph, Node, TensorArg
-from .layout import Layout, RecordArray, relayout
-from .schedule import ScheduleDag
+from .layout import Layout, RecordArray, relayout, relayout_data
+from .schedule import Region, ScheduleDag
 from .tensor import DistTensor, ReductionResult
 
 __all__ = ["Executor", "execute", "make_mesh", "LayoutPlan", "RelayoutStep",
-           "HaloTransfer", "OverlapFallback", "solve_layouts"]
+           "HaloTransfer", "OverlapFallback", "solve_layouts",
+           "plan_signature", "ExecutableCacheEntry",
+           "clear_executable_cache", "executable_cache_stats"]
 
 # version-guarded shard_map accepting the modern kwarg set — bound here so
 # the executor does not depend on repro/__init__'s global jax monkeypatch
@@ -209,7 +238,12 @@ class LayoutPlan:
     overlap request with its reason — both filled in by the Executor.
     ``dag`` is the graph's dependency DAG with its segment placement
     (``core/schedule.py``); :meth:`describe_dag` renders it together with
-    the relayout steps and halo blocks hoisted to each segment entry."""
+    the relayout steps and halo blocks hoisted to each segment entry.
+    ``regions`` is the region compiler's grouping of segments into fused
+    executables, ``signature`` the plan-signature digest keying the
+    process-wide executable cache, and ``cache`` the live cache entry
+    (builds / reuse hits / trace events) — all rendered by
+    :meth:`describe_dag`."""
 
     per_segment: list[dict[str, Layout]] = dfield(default_factory=list)
     initial: dict[str, Layout] = dfield(default_factory=dict)
@@ -217,6 +251,9 @@ class LayoutPlan:
     halo_transfers: list[HaloTransfer] = dfield(default_factory=list)
     overlap_fallbacks: list[OverlapFallback] = dfield(default_factory=list)
     dag: Optional[ScheduleDag] = None
+    regions: list[Region] = dfield(default_factory=list)
+    signature: str = ""
+    cache: Optional["ExecutableCacheEntry"] = None
 
     def transfers_for_segment(self, segment: int) -> list[HaloTransfer]:
         return [h for h in self.halo_transfers if h.segment == segment]
@@ -350,6 +387,257 @@ def solve_layouts(
     return plan
 
 
+# -- plan signature (structural identity of a compiled plan) -------------------
+#
+# The process-wide executable cache must never alias two plans that could
+# compute different values, and should alias plans from *re-instantiated*
+# executors over an identical graph (the serving pattern: build the graph,
+# build an Executor, serve; rebuild on the next request).  Node names are
+# excluded (they come from a global counter and differ per build); node
+# *functions* are keyed by module/qualname + code object + closure/default
+# values, so a rebuilt graph using the same function definitions matches.
+# Anything the signature cannot prove equal falls back to ``id(...)``:
+# a conservative cache miss, never a wrong hit.
+
+_SIG_DEPTH = 6
+
+
+def _module_singleton(fn) -> bool:
+    """True if ``fn`` IS the attribute its module/qualname names — a
+    stable process-wide singleton (e.g. ``jnp.sum``)."""
+    mod = sys.modules.get(getattr(fn, "__module__", None) or "")
+    if mod is None:
+        return False
+    obj = mod
+    try:
+        for part in fn.__qualname__.split("."):
+            obj = getattr(obj, part)
+    except AttributeError:
+        return False
+    return obj is fn
+
+
+def _code_sig(code: types.CodeType):
+    consts = tuple(_code_sig(c) if isinstance(c, types.CodeType) else repr(c)
+                   for c in code.co_consts)
+    return (code.co_name, code.co_argcount, code.co_code, consts,
+            code.co_names)
+
+
+def _all_code_names(code: types.CodeType) -> set:
+    """Every global name referenced by ``code`` or its nested code
+    objects (inner lambdas/defs share the enclosing fn's globals)."""
+    names = set(code.co_names)
+    for c in code.co_consts:
+        if isinstance(c, types.CodeType):
+            names |= _all_code_names(c)
+    return names
+
+
+def _globals_sig(fn, code: types.CodeType, depth: int):
+    """Key the VALUES of the module globals a function reads — a node fn
+    like ``def f(x): return x * SCALE`` must miss the cache when SCALE
+    changed between Executor builds (co_names alone keys the name, not
+    the value).  Module-valued names are keyed by module name (cheap)."""
+    g = getattr(fn, "__globals__", None)
+    if g is None:
+        return ()
+    out = []
+    for name in sorted(_all_code_names(code)):
+        if name in g:
+            v = g[name]
+            if isinstance(v, types.ModuleType):
+                out.append((name, ("module", v.__name__)))
+            else:
+                out.append((name, _sig_value(v, depth)))
+    return tuple(out)
+
+
+def _fn_sig(fn, depth: int = 0):
+    if depth > _SIG_DEPTH:
+        return ("deep-fn", id(fn))
+    if isinstance(fn, functools.partial):
+        return ("partial", _fn_sig(fn.func, depth + 1),
+                _sig_value(fn.args, depth + 1),
+                _sig_value(fn.keywords, depth + 1))
+    # a bound method proxies __code__/__closure__ from the underlying
+    # function — the receiver carries state, so it must be keyed too
+    self_obj = getattr(fn, "__self__", None)
+    if self_obj is not None:
+        func = getattr(fn, "__func__", None)
+        return ("bound", _sig_value(self_obj, depth + 1),
+                _fn_sig(func, depth + 1) if func is not None else None)
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        mod = getattr(fn, "__module__", None)
+        qn = getattr(fn, "__qualname__", None) or getattr(fn, "__name__", None)
+        if qn is not None and _module_singleton(fn):
+            return ("singleton", mod, qn)
+        return ("callable", mod, qn, id(fn))
+    cells = []
+    for c in (fn.__closure__ or ()):
+        try:
+            cells.append(_sig_value(c.cell_contents, depth + 1))
+        except ValueError:          # empty cell
+            cells.append(("empty-cell",))
+    # globals are keyed by VALUE one level deep (the node fn itself and
+    # its closure-level callees); deeper library internals would explode
+    # the walk and are keyed by code identity alone
+    globs = _globals_sig(fn, code, depth + 1) if depth < 2 else ()
+    return ("fn", fn.__module__, fn.__qualname__, _code_sig(code),
+            tuple(cells), _sig_value(fn.__defaults__ or (), depth + 1),
+            _sig_value(fn.__kwdefaults__ or {}, depth + 1), globs)
+
+
+def _tensor_sig(t: DistTensor):
+    spec = (None if t.spec is None
+            else tuple((f.name, f.size) for f in t.spec.fields))
+    return ("dt", t.name, t.space, str(jnp.dtype(t.dtype)), spec,
+            t.layout.name, t.pin_layout, t.partition, t.halo,
+            t.boundary.name, t.boundary_constant, t.subblocks)
+
+
+def _sig_value(v, depth: int = 0):
+    if depth > _SIG_DEPTH:
+        return ("deep", id(v))
+    if v is None or isinstance(v, (bool, int, float, str, bytes)):
+        return v
+    if isinstance(v, enum_lib.Enum):
+        return ("enum", type(v).__name__, v.name)
+    if isinstance(v, (tuple, list)):
+        return ("seq", tuple(_sig_value(x, depth + 1) for x in v))
+    if isinstance(v, dict):
+        return ("map", tuple(sorted(
+            (str(k), _sig_value(x, depth + 1)) for k, x in v.items())))
+    if isinstance(v, DistTensor):
+        return _tensor_sig(v)
+    if isinstance(v, ReductionResult):
+        return ("res", v.name, str(jnp.dtype(v.dtype)), v.init)
+    if isinstance(v, (np.ndarray, jax.Array)):
+        # size/shape/dtype are metadata (no device transfer); only small
+        # arrays are materialized for value-keying
+        if v.size > 1024:
+            return ("bigarr", tuple(v.shape), str(v.dtype), id(v))
+        a = np.asarray(v)
+        return ("arr", a.shape, str(a.dtype), a.tobytes())
+    if callable(v):
+        return _fn_sig(v, depth + 1)
+    return ("obj", type(v).__module__, type(v).__qualname__, id(v))
+
+
+def _node_sig(node: Node):
+    args = []
+    for a in node.args:
+        if isinstance(a, TensorArg):
+            args.append(("targ", _tensor_sig(a.tensor), a.mode.name,
+                         None if a.layout is None else a.layout.name))
+        elif isinstance(a, DistTensor):
+            args.append(("t", _tensor_sig(a)))
+        elif isinstance(a, ReductionResult):
+            args.append(("r", a.name, str(jnp.dtype(a.dtype)), a.init))
+        else:
+            args.append(("v", _sig_value(a)))
+    red = (None if node.reducer is None else
+           (node.reducer.name, node.reducer.combine,
+            _fn_sig(node.reducer.local)))
+    res = (None if node.result is None else
+           (node.result.name, str(jnp.dtype(node.result.dtype)),
+            node.result.init))
+    sub = None if node.subgraph is None else _graph_sig(node.subgraph)
+    return (node.kind, node.exec_kind.name, node.overlap, node.writes,
+            tuple(args), None if node.fn is None else _fn_sig(node.fn),
+            red, res, sub)
+
+
+def _graph_sig(g: Graph):
+    levels = tuple(tuple(_node_sig(n) for n in level) for level in g.levels)
+    cond = None if g.condition is None else _fn_sig(g.condition)
+    return ("graph", levels, cond)
+
+
+def _segments_sig(segments):
+    out = []
+    for kind, payload in segments:
+        if kind == "device":
+            out.append(("device", tuple(
+                tuple(_node_sig(n) for n in wave) for wave in payload)))
+        elif kind == "host":
+            out.append(("host", _node_sig(payload)))
+        else:  # loop / host_loop: payload is the subgraph
+            out.append((kind, _graph_sig(payload)))
+    return tuple(out)
+
+
+def _mesh_sig(mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+    devices = [d for d in mesh.devices.flat]
+    return (tuple(mesh.shape.items()),
+            tuple(int(d.id) for d in devices),
+            devices[0].platform if devices else None)
+
+
+def plan_signature(executor: "Executor") -> tuple:
+    """Structural identity of a compiled plan: graph structure (node
+    kinds, args, function code + closures — NOT auto-generated node
+    names), tensor shapes/dtypes/layouts, mesh, schedule mode, per-
+    segment layout decisions, and donation.  Two executors with equal
+    signatures compute identical values for identical inputs, so their
+    compiled region executables are interchangeable."""
+    plan = executor.plan
+    return ("ripple-plan-v1", executor.schedule, executor.donate,
+            _mesh_sig(executor.mesh), _segments_sig(executor._segments),
+            tuple(tuple(sorted((n, l.name) for n, l in seg.items()))
+                  for seg in plan.per_segment),
+            tuple(sorted((n, l.name) for n, l in plan.initial.items())))
+
+
+# -- process-wide executable cache ---------------------------------------------
+
+@dataclass
+class ExecutableCacheEntry:
+    """All compiled executables of one plan signature.
+
+    ``executables`` maps ``('region', index, entry-layout-sig)`` /
+    ``('fused', entry-layout-sig)`` keys to jitted callables.  ``builds``
+    counts executables constructed, ``hits`` counts fetches that found an
+    executable some *other* fetch already built (the re-instantiated-
+    executor reuse path), and ``trace_events`` counts actual jit traces
+    (the callables bump it from inside their Python bodies, which only
+    run while tracing) — steady-state ``run()`` must not move it."""
+
+    executables: dict[Any, Callable] = dfield(default_factory=dict)
+    builds: int = 0
+    hits: int = 0
+    trace_events: int = 0
+
+
+# Entries pin their builder Executor (the jitted callables close over it)
+# for process lifetime — that retention IS the serving-pattern feature
+# (compiled programs survive Executor re-instantiation), but a process
+# cycling through many distinct plans should call clear_executable_cache()
+# when a plan generation is retired.
+_EXECUTABLE_CACHE: dict[tuple, ExecutableCacheEntry] = {}
+
+
+def clear_executable_cache() -> None:
+    """Drop every cached plan executable (tests / memory pressure /
+    retiring a plan generation in a long-lived process)."""
+    _EXECUTABLE_CACHE.clear()
+
+
+def executable_cache_stats() -> dict:
+    """Aggregate stats over the process-wide executable cache."""
+    entries = list(_EXECUTABLE_CACHE.values())
+    return {
+        "plans": len(entries),
+        "executables": sum(len(e.executables) for e in entries),
+        "builds": sum(e.builds for e in entries),
+        "hits": sum(e.hits for e in entries),
+        "trace_events": sum(e.trace_events for e in entries),
+    }
+
+
 # -- overlap decision (paper Fig. 7 generalized) -------------------------------
 
 # (node name, reason) pairs already warned about — "warn once" holds across
@@ -422,14 +710,22 @@ class Executor:
       barrier, every host node a break) — the escape hatch and the
       reference semantics the property tests compare against.
 
-    Both schedules produce bitwise-identical state for any valid graph;
-    the DAG schedule just gives XLA more to overlap per dispatch.
+    ``regions`` (default True) enables the region compiler: maximal runs
+    of device/loop segments become one jitted executable each, with the
+    boundary relayouts traced inside, cached process-wide by plan
+    signature.  ``regions=False`` falls back to per-segment dispatch with
+    eager Python relayout glue (the pre-region behavior, and the baseline
+    ``benchmarks/dispatch_overhead.py`` measures against).
+
+    Both schedules (and both region modes) produce bitwise-identical
+    state for any valid graph; the DAG schedule just gives XLA more to
+    overlap per dispatch, and regions cut the per-step dispatch count.
     """
 
     def __init__(self, graph: Graph, mesh: Optional[Mesh] = None,
                  donate: bool = True,
                  layout_overrides: Optional[dict[str, Layout]] = None,
-                 schedule: str = "dag"):
+                 schedule: str = "dag", regions: bool = True):
         if schedule not in ("dag", "sequential"):
             raise ValueError(
                 f"schedule must be 'dag' or 'sequential', got {schedule!r}")
@@ -437,6 +733,7 @@ class Executor:
         self.mesh = mesh
         self.donate = donate
         self.schedule = schedule
+        self.regions_enabled = bool(regions)
         self.tensors = graph.all_tensors()
         self.results = graph.all_results()
         self.dag = schedule_lib.build_dag(graph)
@@ -448,6 +745,9 @@ class Executor:
         self.plan = solve_layouts(self._segments, self.tensors,
                                   overrides=layout_overrides)
         self.plan.dag = self.dag
+        self._sharded = mesh is not None and any(
+            ax is not None for t in self.tensors.values()
+            for ax in t.partition)
         # physical layout of each record tensor's state entry right now
         self._state_layouts: dict[str, Layout] = dict(self.plan.initial)
         if mesh is not None:
@@ -460,7 +760,21 @@ class Executor:
                      else t).validate_mesh(mesh)
         self._overlap_decisions: dict[str, _OverlapDecision] = {}
         self._collect_halo_schedule()
-        self._jitted: dict[int, Callable] = {}
+        # region compiler: segment runs -> fused executables, cached
+        # process-wide by plan signature
+        self._regions = schedule_lib.group_regions(
+            [k for k, _ in self._segments])
+        self.plan.regions = self._regions
+        self._plan_sig = plan_signature(self)
+        self.plan.signature = hashlib.sha1(
+            repr(self._plan_sig).encode()).hexdigest()[:12]
+        self._cache = _EXECUTABLE_CACHE.setdefault(
+            self._plan_sig, ExecutableCacheEntry())
+        self.plan.cache = self._cache
+        self._fetched: set = set()        # executable keys this instance saw
+        self._sub_execs: dict[int, "Executor"] = {}   # per loop segment
+        self._jitted: dict[int, Callable] = {}        # regions=False path
+        self.eager_relayouts = 0   # conversions dispatched outside a trace
 
     def _collect_halo_schedule(self) -> None:
         """Static pass: record every scheduled halo transfer per segment in
@@ -507,9 +821,9 @@ class Executor:
                     axes = _halo_axes(entries)
                     shard = _shard_storage_shape(eff_t, mesh)
                     itemsize = np.dtype(eff_t.dtype).itemsize
-                    for phase, bkey in halo_lib.iter_block_keys(axes):
+                    for phase, bkey, shape in halo_lib.schedule_blocks(
+                            shard, axes):
                         last, _side = bkey[-1]
-                        shape = halo_lib.block_shape(shard, axes, bkey)
                         self.plan.halo_transfers.append(HaloTransfer(
                             si, node.name, t.name, phase,
                             tuple((entries[j].dim, s) for j, s in bkey),
@@ -518,12 +832,21 @@ class Executor:
                             nbytes=math.prod(shape) * itemsize))
 
     # -- layout plumbing ---------------------------------------------------
-    def _eff(self, t: DistTensor) -> DistTensor:
-        """The tensor handle in its *current physical* layout."""
+    def _eff_in(self, t: DistTensor, layouts: dict[str, Layout]) -> DistTensor:
+        """The tensor handle under an explicit layout assignment (region
+        lowering threads the assignment; nothing reads mutable state)."""
         if not t.is_record:
             return t
-        lay = self._state_layouts.get(t.name, t.layout)
+        lay = layouts.get(t.name, t.layout)
         return t if lay is t.layout else t.with_(layout=lay)
+
+    def _eff(self, t: DistTensor) -> DistTensor:
+        """The tensor handle in its *current physical* layout."""
+        return self._eff_in(t, self._state_layouts)
+
+    def _layouts_for_segment(self, i: int) -> dict[str, Layout]:
+        """The full layout assignment a segment's body is lowered under."""
+        return {**self.plan.initial, **self.plan.per_segment[i]}
 
     def _apply_segment_layouts(self, state: dict, seg: int) -> dict:
         """Insert the solver's relayout steps before segment ``seg``:
@@ -547,11 +870,18 @@ class Executor:
             arr = relayout(RecordArray(state[name], t.spec, cur), lay)
             data = arr.data
             self._state_layouts[name] = lay
+            self.eager_relayouts += 1
             if self.mesh is not None:
                 data = jax.device_put(data,
                                       self._eff(t).sharding(self.mesh))
             state[name] = data
         return state
+
+    def _state_specs(self, state: dict, layouts: dict[str, Layout]) -> dict:
+        """PartitionSpec per state entry under a layout assignment."""
+        return {k: (self._eff_in(self.tensors[k], layouts).pspec()
+                    if k in self.tensors else P())
+                for k in state}
 
     # -- state management ------------------------------------------------
     def init_state(self, **overrides) -> dict[str, Any]:
@@ -640,12 +970,26 @@ class Executor:
     # -- schedule introspection -------------------------------------------
     def describe_dag(self) -> str:
         """Render the dependency DAG, its segment/wave placement under the
-        active schedule, and the relayouts / halo blocks hoisted to each
-        segment entry (see ``core/schedule.py``)."""
+        active schedule, the relayouts / halo blocks hoisted to each
+        segment entry, the region grouping, and the executable-cache
+        state (see ``core/schedule.py``)."""
         return self.plan.describe_dag()
 
+    def cache_stats(self) -> dict:
+        """Live executable-cache stats for this plan signature.
+
+        ``trace_events`` counts actual jit traces of this plan's
+        executables; a steady-state ``run()`` must leave it unchanged.
+        ``hits`` counts executables this (or another) Executor fetched
+        without building — the re-instantiated-executor reuse path."""
+        c = self._cache
+        return {"signature": self.plan.signature,
+                "executables": len(c.executables), "builds": c.builds,
+                "hits": c.hits, "trace_events": c.trace_events}
+
     # -- node lowering (called inside shard_map / plain trace) ----------------
-    def _resolve_args(self, node: Node, state: dict, sharded: bool):
+    def _resolve_args(self, node: Node, state: dict, sharded: bool,
+                      layouts: dict[str, Layout]):
         """Build the python args passed to a node fn; haloed where needed."""
         mesh = self.mesh if sharded else None
         vals = []
@@ -655,7 +999,6 @@ class Executor:
                 continue
             t = None
             mode = AccessMode.DEFAULT
-            from .graph import TensorArg
             if isinstance(a, TensorArg):
                 t, mode = a.tensor, a.mode
             elif isinstance(a, DistTensor):
@@ -663,29 +1006,29 @@ class Executor:
             if t is None:
                 vals.append(a)
                 continue
-            t = self._eff(t)
+            t = self._eff_in(t, layouts)
             data = state[t.name]
             if mode.padded:
                 data = _apply_halo(data, t, mesh)
             vals.append(t.wrap(data) if t.is_record else data)
         return vals
 
-    def _lower_split(self, node: Node, state: dict, sharded: bool) -> None:
+    def _lower_split(self, node: Node, state: dict, sharded: bool,
+                     layouts: dict[str, Layout]) -> None:
         writes = node.default_writes()
         write_tensors = []
         for i in writes:
             a = node.args[i]
-            from .graph import TensorArg
             write_tensors.append(a.tensor if isinstance(a, TensorArg) else a)
 
         dec = self._overlap_decisions.get(node.name)
         if node.overlap and sharded and dec is not None \
                 and dec.strips is not None:
             self._lower_split_overlapped(node, state, write_tensors,
-                                         dec.strips)
+                                         dec.strips, layouts)
             return
 
-        vals = self._resolve_args(node, state, sharded)
+        vals = self._resolve_args(node, state, sharded, layouts)
         out = node.fn(*vals)
         self._store_writes(node, state, write_tensors, out)
 
@@ -704,7 +1047,8 @@ class Executor:
 
     def _lower_split_overlapped(self, node: Node, state: dict,
                                 write_tensors,
-                                strips: tuple[tuple[int, int], ...]) -> None:
+                                strips: tuple[tuple[int, int], ...],
+                                layouts: dict[str, Layout]) -> None:
         """Interior/boundary split over N partitioned halo axes: every
         halo block's ppermute is issued up front (phase 1 edge strips,
         phase 2+ corner hops), the interior program runs on the unextended
@@ -736,7 +1080,7 @@ class Executor:
             else:
                 preps.append(("raw", a))
                 continue
-            t = self._eff(t)
+            t = self._eff_in(t, layouts)
             data = state[t.name]
             entries = ({e.dim: e for e in _halo_plan(t, mesh)}
                        if mode.padded else {})
@@ -799,7 +1143,7 @@ class Executor:
             for k, (d, _) in enumerate(strips) for side in ("low", "high")}
 
         for wi, wt in enumerate(write_tensors):
-            wt_eff = self._eff(wt)
+            wt_eff = self._eff_in(wt, layouts)
 
             def stitch(k: int):
                 if k == len(strips):
@@ -812,11 +1156,12 @@ class Executor:
 
             state[wt.name] = stitch(0)
 
-    def _lower_reduce(self, node: Node, state: dict, sharded: bool) -> None:
+    def _lower_reduce(self, node: Node, state: dict, sharded: bool,
+                      layouts: dict[str, Layout]) -> None:
         t, field = node.args
         data = state[t.name]
         if t.is_record and field is not None:
-            data = self._eff(t).wrap(data).field(field)
+            data = self._eff_in(t, layouts).wrap(data).field(field)
         local = node.reducer.local(data)
         if sharded:
             axes = tuple({ax for ax in t.partition if ax is not None
@@ -827,7 +1172,8 @@ class Executor:
                 local = op(local, axes)
         state[node.result.name] = jnp.asarray(local, dtype=node.result.dtype)
 
-    def _lower_levels(self, levels, state: dict, sharded: bool) -> dict:
+    def _lower_levels(self, levels, state: dict, sharded: bool,
+                      layouts: dict[str, Layout]) -> dict:
         state = dict(state)
         for level in levels:
             # paper: nodes on a level are independent -> lower all against the
@@ -836,20 +1182,19 @@ class Executor:
             for node in level:
                 if node.kind == "split":
                     tmp = dict(snapshot)
-                    self._lower_split(node, tmp, sharded)
+                    self._lower_split(node, tmp, sharded, layouts)
                     for k, v in tmp.items():
                         if k not in snapshot or v is not snapshot[k]:
                             state[k] = v
                 elif node.kind == "reduce":
                     tmp = dict(snapshot)
-                    self._lower_reduce(node, tmp, sharded)
+                    self._lower_reduce(node, tmp, sharded, layouts)
                     state[node.result.name] = tmp[node.result.name]
                 elif node.kind == "op":
                     tmp = dict(snapshot)
-                    vals = self._resolve_args(node, tmp, sharded)
+                    vals = self._resolve_args(node, tmp, sharded, layouts)
                     writes = node.default_writes()
                     wt = []
-                    from .graph import TensorArg
                     for i in writes:
                         a = node.args[i]
                         wt.append(a.tensor if isinstance(a, TensorArg) else a)
@@ -862,63 +1207,195 @@ class Executor:
                     raise ValueError(f"unexpected node kind {node.kind}")
         return state
 
-    # -- segment compilation -----------------------------------------------
+    # -- loop (conditional subgraph) lowering --------------------------------
+    def _sub_executor(self, i: int) -> "Executor":
+        """The sub-Executor of loop segment ``i`` — built ONCE per segment
+        and cached (it used to be re-constructed, and its segments
+        re-jitted, on every host_loop pass)."""
+        sub = self._sub_execs.get(i)
+        if sub is None:
+            _kind, payload = self._segments[i]
+            sub = self._sub_execs[i] = Executor(
+                payload, self.mesh, donate=False,
+                layout_overrides=self.plan.per_segment[i],
+                schedule=self.schedule, regions=self.regions_enabled)
+        return sub
+
+    def _lower_loop(self, sub_graph: Graph, seg: int, state: dict) -> dict:
+        """Trace a device ``loop`` segment (a ``lax.while_loop`` over the
+        sub-graph's segments) directly into the enclosing program — no
+        extra jit wrapper, so a region containing loops is still one
+        executable.  The sub-executor must agree with the enclosing plan:
+        layouts are loop-invariant inside one compiled while body."""
+        sub = self._sub_executor(seg)
+        sharded = sub._sharded   # sub-specific: the loop body may be
+        # unpartitioned even when the enclosing graph is sharded
+
+        def body_fn(s):
+            for k, (kind, payload) in enumerate(sub._segments):
+                if kind != "device":
+                    raise ValueError("device loop with host segment")
+                s = sub._lower_levels(payload, s, sharded,
+                                      sub._layouts_for_segment(k))
+            return s
+
+        if sharded:
+            specs = sub._state_specs(state, sub.plan.initial)
+
+            def shard_body(s):
+                # while semantics: predicate gates the FIRST iteration
+                # too (an initially-false condition runs nothing)
+                return lax.while_loop(sub_graph.condition, body_fn, s)
+
+            fn = shard_map(shard_body, mesh=self.mesh,
+                           in_specs=(specs,), out_specs=specs,
+                           check_vma=False)
+            return fn(state)
+        return lax.while_loop(sub_graph.condition, body_fn, state)
+
+    # -- region compiler -----------------------------------------------------
+    def _layout_sig(self, layouts: dict[str, Layout]) -> tuple:
+        return tuple(sorted((n, lay.name) for n, lay in layouts.items()))
+
+    def _segment_chain(self, seg_indices, entry_layouts: dict[str, Layout]):
+        """Static layout evolution through a run of segments: per segment
+        the boundary conversions to trace and the full layout assignment
+        its body is lowered under; plus the exit layouts."""
+        current = dict(entry_layouts)
+        chain = []
+        for si in seg_indices:
+            targets = self.plan.per_segment[si]
+            conv = [(n, current[n], lay)
+                    for n, lay in sorted(targets.items())
+                    if current[n] is not lay]
+            current.update(targets)
+            chain.append((si, conv, dict(current)))
+        return chain, current
+
+    def _traced_convert(self, state: dict, conv, layouts) -> dict:
+        """Apply boundary relayouts INSIDE a trace (pure ops; the sharding
+        constraint mirrors what the eager path's device_put enforced)."""
+        for name, src, dst in conv:
+            t = self.tensors[name]
+            data = relayout_data(state[name], t.spec, src, dst)
+            if self.mesh is not None:
+                data = lax.with_sharding_constraint(
+                    data, self._eff_in(t, layouts).sharding(self.mesh))
+            state[name] = data
+        return state
+
+    def _donate_split(self, entry_layouts, exit_layouts):
+        """State keys whose storage shape is stable across a region (same
+        layout at entry and exit) — only those are donated, so XLA can
+        actually alias them and jax never warns about unusable donations."""
+        return frozenset(
+            k for k in list(self.tensors) + list(self.results)
+            if k not in entry_layouts
+            or entry_layouts[k] is exit_layouts.get(k, entry_layouts[k]))
+
+    def _fetch(self, key, build: Callable) -> Callable:
+        """One executable from the plan-wide cache, building on miss.
+        A fetch that finds an executable this instance never requested
+        counts as a reuse hit (the re-instantiated-executor path)."""
+        fn = self._cache.executables.get(key)
+        if fn is None:
+            fn = self._cache.executables[key] = build()
+            self._cache.builds += 1
+        elif key not in self._fetched:
+            self._cache.hits += 1
+        self._fetched.add(key)
+        return fn
+
+    def _build_region_fn(self, region: Region,
+                         entry_layouts: dict[str, Layout]) -> Callable:
+        """Lower one device region to a single jitted executable: for each
+        segment in the run, the boundary relayouts (traced, not eagerly
+        dispatched) then the segment body — device levels under one
+        shard_map, loop segments as inlined while_loops."""
+        chain, exit_layouts = self._segment_chain(region.segments,
+                                                  entry_layouts)
+        donate_keys = self._donate_split(entry_layouts, exit_layouts)
+        cache_entry = self._cache
+        sharded = self._sharded
+
+        def region_call(donated, kept):
+            cache_entry.trace_events += 1   # Python body runs per trace only
+            state = {**donated, **kept}
+            for si, conv, layouts in chain:
+                state = self._traced_convert(dict(state), conv, layouts)
+                kind, payload = self._segments[si]
+                if kind == "device":
+                    if sharded:
+                        specs = self._state_specs(state, layouts)
+                        fn = shard_map(
+                            partial(self._lower_levels, payload,
+                                    sharded=True, layouts=layouts),
+                            mesh=self.mesh, in_specs=(specs,),
+                            out_specs=specs, check_vma=False)
+                        state = fn(state)
+                    else:
+                        state = self._lower_levels(payload, state, False,
+                                                   layouts)
+                else:  # 'loop'
+                    state = self._lower_loop(payload, si, state)
+            return state
+
+        jfn = jax.jit(region_call,
+                      donate_argnums=(0,) if self.donate else ())
+
+        def invoke(state):
+            donated = {k: v for k, v in state.items() if k in donate_keys}
+            kept = {k: v for k, v in state.items() if k not in donate_keys}
+            return jfn(donated, kept)
+
+        invoke.jit_fn = jfn
+        invoke.donate_keys = donate_keys
+        invoke.exit_layouts = exit_layouts
+        return invoke
+
+    def _region_executable(self, region: Region):
+        """The compiled executable for a region at the CURRENT entry
+        layouts (cached process-wide), plus its exit layouts."""
+        entry = {n: self._state_layouts[n] for n in self.plan.initial}
+        key = ("region", region.index, self._layout_sig(entry))
+        fn = self._fetch(key, lambda: self._build_region_fn(region, entry))
+        return fn, fn.exit_layouts
+
+    def region_hlo(self, state: dict, index: int = 0) -> str:
+        """Compiled HLO text of a device region's executable for ``state``
+        (benchmark/analysis introspection; reuses the jit cache)."""
+        region = self._regions[index]
+        if region.kind != "device":
+            raise ValueError(f"region {index} is {region.kind!r}, "
+                             f"not a device region")
+        fn, _ = self._region_executable(region)
+        donated = {k: v for k, v in state.items() if k in fn.donate_keys}
+        kept = {k: v for k, v in state.items() if k not in fn.donate_keys}
+        return fn.jit_fn.lower(donated, kept).compile().as_text()
+
+    # -- segment compilation (regions=False per-segment dispatch) -----------
     def _device_fn(self, levels) -> Callable:
-        sharded = self.mesh is not None and any(
-            ax is not None for t in self.tensors.values() for ax in t.partition)
+        sharded = self._sharded
 
         def body(state):
-            return self._lower_levels(levels, state, sharded)
+            return self._lower_levels(levels, state, sharded,
+                                      dict(self._state_layouts))
 
         if not sharded:
             return jax.jit(body, donate_argnums=0 if self.donate else ())
 
-        in_specs = {}
         # specs must cover exactly the state dict; build lazily per call
         def call(state):
-            specs = {k: (self._eff(self.tensors[k]).pspec()
-                         if k in self.tensors else P())
-                     for k in state}
+            specs = self._state_specs(state, self._state_layouts)
             fn = shard_map(body, mesh=self.mesh, in_specs=(specs,),
-                               out_specs=specs, check_vma=False)
+                           out_specs=specs, check_vma=False)
             return fn(state)
 
         return jax.jit(call, donate_argnums=0 if self.donate else ())
 
     def _loop_fn(self, sub: Graph, seg: int) -> Callable:
-        # the sub-executor must agree with the enclosing plan: layouts are
-        # loop-invariant inside one compiled while body
-        sub_exec = Executor(sub, self.mesh, donate=False,
-                            layout_overrides=self.plan.per_segment[seg],
-                            schedule=self.schedule)
-        sharded = self.mesh is not None and any(
-            ax is not None for t in sub_exec.tensors.values()
-            for ax in t.partition)
-
-        def body_fn(state):
-            s = state
-            for kind, payload in sub_exec._segments:
-                if kind != "device":
-                    raise ValueError("device loop with host segment")
-                s = sub_exec._lower_levels(payload, s, sharded)
-            return s
-
         def call(state):
-            if sharded:
-                specs = {k: (sub_exec._eff(sub_exec.tensors[k]).pspec()
-                             if k in sub_exec.tensors else P())
-                         for k in state}
-
-                def shard_body(s):
-                    # while semantics: predicate gates the FIRST iteration
-                    # too (an initially-false condition runs nothing)
-                    return lax.while_loop(sub.condition, body_fn, s)
-
-                fn = shard_map(shard_body, mesh=self.mesh,
-                                   in_specs=(specs,), out_specs=specs,
-                                   check_vma=False)
-                return fn(state)
-            return lax.while_loop(sub.condition, body_fn, state)
+            return self._lower_loop(sub, seg, state)
 
         return jax.jit(call, donate_argnums=0 if self.donate else ())
 
@@ -937,14 +1414,50 @@ class Executor:
 
     def __call__(self, state: dict) -> dict:
         with self._layout_epoch():
-            state = self._call_segments(dict(state))
+            state = self._pass_once(dict(state))
             return self._restore_initial_layouts(dict(state))
 
+    def _pass_once(self, state: dict) -> dict:
+        if self.regions_enabled:
+            return self._run_regions_once(state)
+        return self._call_segments(state)
+
+    def _run_regions_once(self, state: dict) -> dict:
+        """One pass over the region schedule: each device region is ONE
+        cached executable call (its relayouts and halo glue run inside
+        the trace); host work runs eagerly between regions.  Layout
+        bookkeeping is runtime-driven, so repeated passes re-dispatch
+        nothing when consecutive iterations agree on layout."""
+        for region in self._regions:
+            if region.kind == "device":
+                fn, exit_layouts = self._region_executable(region)
+                state = fn(state)
+                self._state_layouts.update(exit_layouts)
+            elif region.kind == "host":
+                si = region.start
+                state = self._apply_segment_layouts(dict(state), si)
+                node: Node = self._segments[si][1]
+                jax.block_until_ready(jax.tree_util.tree_leaves(state))
+                if node.fn is not None:
+                    vals = self._resolve_args(
+                        node, state, False, self._state_layouts) \
+                        if node.args else []
+                    node.fn(*vals)
+            else:  # host_loop
+                si = region.start
+                state = self._apply_segment_layouts(dict(state), si)
+                sub_graph: Graph = self._segments[si][1]
+                sub = self._sub_executor(si)
+                # while semantics: check before the first iteration too
+                while bool(jax.device_get(sub_graph.condition(state))):
+                    state = sub(state)
+        return state
+
     def _call_segments(self, state: dict) -> dict:
-        """One pass over all segments; relayouts are runtime-driven from
-        the current physical layouts, so repeated passes (``run``'s
-        fallback loop) only convert where consecutive iterations actually
-        disagree instead of restoring after every pass."""
+        """Per-segment dispatch (``regions=False``): one jit call per
+        segment with eager relayout glue between them; relayouts are
+        runtime-driven from the current physical layouts, so repeated
+        passes only convert where consecutive iterations disagree."""
         for i, (kind, payload) in enumerate(self._segments):
             state = self._apply_segment_layouts(state, i)
             if kind == "device":
@@ -958,10 +1471,7 @@ class Executor:
                     fn = self._jitted[i] = self._loop_fn(payload, i)
                 state = fn(state)
             elif kind == "host_loop":
-                sub_exec = Executor(
-                    payload, self.mesh, donate=False,
-                    layout_overrides=self.plan.per_segment[i],
-                    schedule=self.schedule)
+                sub_exec = self._sub_executor(i)
                 # while semantics: check before the first iteration too
                 while bool(jax.device_get(payload.condition(state))):
                     state = sub_exec(state)
@@ -969,55 +1479,92 @@ class Executor:
                 node: Node = payload
                 jax.block_until_ready(jax.tree_util.tree_leaves(state))
                 if node.fn is not None:
-                    vals = self._resolve_args(node, state, sharded=False) \
+                    vals = self._resolve_args(
+                        node, state, False, self._state_layouts) \
                         if node.args else []
                     node.fn(*vals)
         return state
 
     def run(self, state: dict, steps: int) -> dict:
         """Execute the whole graph ``steps`` times (graphs are built once,
-        executed many — paper §5.3).  Device-only graphs without a condition
-        are compiled as one fori_loop."""
+        executed many — paper §5.3).  Device-only graphs without a
+        condition run as one fori_loop with ``steps`` a DYNAMIC argument
+        (distinct step counts share a single trace); everything else
+        loops over the cached region executables."""
         if steps <= 0:
             return state
         # the scheduler owns the fusability decision: only a DAG with no
         # host / sync / loop vertex lowers every segment to device code,
         # whatever the schedule mode (a host node anywhere must run
-        # between jit calls every step, so it breaks the fori fusion)
-        if self.graph.condition is None and self.dag.device_only:
+        # between jit calls every step, so it breaks the fori fusion).
+        # regions=False escapes the fused/cached machinery entirely —
+        # the escape hatch must not route through what it escapes.
+        if self.regions_enabled and self.graph.condition is None \
+                and self.dag.device_only:
             return self._run_fused(state, steps)
         with self._layout_epoch():
+            state = dict(state)
             for _ in range(steps):
-                state = self._call_segments(dict(state))
+                state = self._pass_once(dict(state))
             return self._restore_initial_layouts(dict(state))
 
-    def _run_fused(self, state: dict, steps: int) -> dict:
-        """Device-only fast path: all steps in one jitted fori_loop."""
-        with self._layout_epoch():
-            for i in range(len(self._segments)):
-                state = self._apply_segment_layouts(dict(state), i)
-            levels = [lv for _, seg in self._segments for lv in seg]
-            sharded = self.mesh is not None and any(
-                ax is not None for t in self.tensors.values()
-                for ax in t.partition)
+    def _build_fused_fn(self, entry_layouts: dict[str, Layout]) -> Callable:
+        """Device-only fast path executable: entry relayouts traced up
+        front, then all segments' levels inside one fori_loop whose trip
+        count is a runtime argument — NOT closed over, so ``run(s, 3)``
+        and ``run(s, 1000)`` share one trace.  (Device-only graphs have a
+        single segment, so layouts are loop-invariant by construction.)"""
+        current = dict(entry_layouts)
+        convs = []
+        for si in range(len(self._segments)):
+            for n, lay in sorted(self.plan.per_segment[si].items()):
+                if current[n] is not lay:
+                    convs.append((n, current[n], lay))
+                    current[n] = lay
+        body_layouts = dict(current)
+        levels = [lv for _, seg in self._segments for lv in seg]
+        donate_keys = self._donate_split(entry_layouts, body_layouts)
+        cache_entry = self._cache
+        sharded = self._sharded
+
+        def call(donated, kept, steps):
+            cache_entry.trace_events += 1
+            state = self._traced_convert({**donated, **kept}, convs,
+                                         body_layouts)
 
             def body(_, s):
-                return self._lower_levels(levels, s, sharded)
+                return self._lower_levels(levels, s, sharded, body_layouts)
 
-            def call(s):
-                if sharded:
-                    specs = {k: (self._eff(self.tensors[k]).pspec()
-                                 if k in self.tensors else P())
-                             for k in s}
-                    fn = shard_map(
-                        lambda st: lax.fori_loop(0, steps, body, st),
-                        mesh=self.mesh, in_specs=(specs,), out_specs=specs,
-                        check_vma=False)
-                    return fn(s)
-                return lax.fori_loop(0, steps, body, s)
+            if sharded:
+                specs = self._state_specs(state, body_layouts)
+                fn = shard_map(
+                    lambda st, n: lax.fori_loop(0, n, body, st),
+                    mesh=self.mesh, in_specs=(specs, P()),
+                    out_specs=specs, check_vma=False)
+                return fn(state, steps)
+            return lax.fori_loop(0, steps, body, state)
 
-            out = jax.jit(call,
-                          donate_argnums=0 if self.donate else ())(state)
+        jfn = jax.jit(call, donate_argnums=(0,) if self.donate else ())
+
+        def invoke(state, steps):
+            donated = {k: v for k, v in state.items() if k in donate_keys}
+            kept = {k: v for k, v in state.items() if k not in donate_keys}
+            return jfn(donated, kept, jnp.asarray(steps, jnp.int32))
+
+        invoke.jit_fn = jfn
+        invoke.donate_keys = donate_keys
+        invoke.exit_layouts = body_layouts
+        return invoke
+
+    def _run_fused(self, state: dict, steps: int) -> dict:
+        """Device-only fast path: all steps in one jitted fori_loop,
+        cached by plan signature + entry layouts."""
+        with self._layout_epoch():
+            entry = dict(self._state_layouts)
+            key = ("fused", self._layout_sig(entry))
+            fn = self._fetch(key, lambda: self._build_fused_fn(entry))
+            out = fn(dict(state), steps)
+            self._state_layouts.update(fn.exit_layouts)
             return self._restore_initial_layouts(dict(out))
 
 

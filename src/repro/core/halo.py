@@ -25,6 +25,14 @@ phase p-1 receives), every send can be in flight while the interior
 program runs.  All collective paths run *inside* shard_map (per-shard
 view); axes with ``axis_name=None`` are filled locally from the boundary
 policy, so fill-only schedules work anywhere.
+
+Purity contract: every function in this module is a pure function of its
+array arguments — no Python-side state, no eager dispatch decisions —
+so the executor's *region compiler* can trace exchange and assembly
+directly into a fused region executable (one jitted program per run of
+segments) and replay it without retracing.  :func:`schedule_blocks` is
+the static (shape-level) description of the same schedule, consumed by
+the plan introspection for per-block byte accounting.
 """
 
 from __future__ import annotations
@@ -47,6 +55,7 @@ __all__ = [
     "assemble_region",
     "block_shape",
     "iter_block_keys",
+    "schedule_blocks",
     "halo_blocks",
     "pad_boundary_only",
     "unpad",
@@ -229,6 +238,16 @@ def iter_block_keys(axes: Sequence[HaloAxis]):
                     yield phase, k
                     nxt.append(k)
         frontier = nxt
+
+
+def schedule_blocks(shape: Sequence[int], axes: Sequence[HaloAxis]):
+    """Yield ``(phase, key, block_shape)`` for every transfer block of a
+    shard of ``shape`` — the static, shape-level description of the
+    schedule :func:`exchange_blocks` executes.  The executor's plan pass
+    uses it to account per-block bytes (``HaloTransfer.nbytes``) without
+    tracing anything."""
+    for phase, key in iter_block_keys(axes):
+        yield phase, key, block_shape(shape, axes, key)
 
 
 def block_shape(

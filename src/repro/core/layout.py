@@ -55,6 +55,7 @@ __all__ = [
     "RecordArray",
     "RecordRef",
     "relayout",
+    "relayout_data",
     "dispatch_with_relayout",
     "aosoa_tile",
     "AOSOA_LANE",
@@ -359,6 +360,20 @@ def relayout(arr: RecordArray, target: Layout) -> RecordArray:
     the executor's layout solver emits exactly this at segment boundaries
     when a producer and consumer disagree on a tensor's layout."""
     return arr.with_layout(target)
+
+
+def relayout_data(data, spec: RecordSpec, src: Layout, dst: Layout):
+    """Pure, trace-safe relayout on *raw* record storage.
+
+    This is the form the executor's region compiler emits *inside* a
+    fused region program: the boundary conversion between two jit
+    segments is a plain transpose+reshape of the backing array, so it
+    can be traced into the region executable instead of dispatched
+    eagerly from Python between segment calls.  Value-identical to
+    ``relayout(RecordArray(data, spec, src), dst).data``."""
+    if src is dst:
+        return data
+    return RecordArray(data, spec, src).with_layout(dst).data
 
 
 def dispatch_with_relayout(kernel_fn, rec: RecordArray, *args,

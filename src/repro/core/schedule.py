@@ -53,11 +53,13 @@ __all__ = [
     "READS_ANY",
     "DagUnit",
     "DagEdge",
+    "Region",
     "ScheduleDag",
     "node_access",
     "graph_access",
     "build_dag",
     "dag_segments",
+    "group_regions",
     "sequential_segments",
     "place_units",
 ]
@@ -280,6 +282,18 @@ class ScheduleDag:
                     f"seg{si} transfers: {tensor} {len(hs)} blocks "
                     f"({sends} ppermutes, {nbytes} bytes, {mode}) "
                     f"hoisted to segment entry")
+            if getattr(plan, "regions", None):
+                lines.append("regions (fused executables):")
+                lines.extend("  " + r.describe() for r in plan.regions)
+            if getattr(plan, "signature", ""):
+                cache = getattr(plan, "cache", None)
+                line = f"plan signature {plan.signature}"
+                if cache is not None:
+                    line += (f" — executable cache: "
+                             f"{len(cache.executables)} executables, "
+                             f"{cache.builds} builds, {cache.hits} reuse "
+                             f"hits, {cache.trace_events} traces")
+                lines.append(line)
         return "\n".join(lines)
 
 
@@ -440,6 +454,64 @@ def dag_segments(dag: ScheduleDag) -> list[tuple]:
     flush()
     dag.segment_kinds = kinds
     return segments
+
+
+@dataclass(frozen=True)
+class Region:
+    """A maximal run of consecutive segments the region compiler fuses
+    into ONE jitted executable (``kind == 'device'``: device and device
+    ``loop`` segments, with their boundary relayouts and halo glue traced
+    inside), or a single host-side segment that must run eagerly between
+    executables (``'host'`` — a callback/sync; ``'host_loop'`` — a
+    conditional subgraph containing host nodes).
+
+    ``start``/``stop`` are the half-open segment-index span in the
+    executor's segment list."""
+
+    index: int
+    kind: str            # 'device' | 'host' | 'host_loop'
+    start: int
+    stop: int
+
+    def __len__(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def segments(self) -> range:
+        return range(self.start, self.stop)
+
+    def describe(self) -> str:
+        span = (f"seg{self.start}" if len(self) == 1
+                else f"seg{self.start}..seg{self.stop - 1}")
+        n = len(self)
+        return (f"region {self.index} ({self.kind}): {span} "
+                f"({n} segment{'s' if n != 1 else ''}"
+                f"{' -> 1 executable' if self.kind == 'device' else ''})")
+
+
+def group_regions(segment_kinds: list[str]) -> list[Region]:
+    """Group a segment-kind list into maximal fusable regions.
+
+    Consecutive ``device`` / ``loop`` segments form one ``device`` region
+    (the region compiler lowers the whole run — segment bodies, boundary
+    relayouts, while-loops — to a single jitted program, so repeated
+    execution pays one dispatch per region instead of one per segment
+    plus eager Python relayout glue).  ``host`` and ``host_loop``
+    segments are hard breaks: each is its own region and runs eagerly."""
+    regions: list[Region] = []
+    i = 0
+    while i < len(segment_kinds):
+        if segment_kinds[i] in ("device", "loop"):
+            j = i
+            while j < len(segment_kinds) and \
+                    segment_kinds[j] in ("device", "loop"):
+                j += 1
+            regions.append(Region(len(regions), "device", i, j))
+            i = j
+        else:
+            regions.append(Region(len(regions), segment_kinds[i], i, i + 1))
+            i += 1
+    return regions
 
 
 def sequential_segments(graph: Graph) -> list[tuple]:

@@ -4,41 +4,17 @@ CPU wall-clock numbers are DIRECTIONAL ONLY (the paper measured V100s;
 this container is one CPU core) — every table also emits the structural
 metric that transfers to TPU (bytes moved / FLOPs / layout effect ratios),
 derived from the loop-aware HLO analysis where relevant.
+
+The timing harness itself lives in ``repro.tuning.timing`` — the SAME
+split-timing implementation the measured autotuner uses, re-exported
+here so every table and the tuner report comparable numbers.
 """
 
 from __future__ import annotations
 
-import time
+from repro.tuning.timing import time_fn, time_fn_split  # noqa: F401
 
-import jax
-
-
-def time_fn_split(fn, *args, iters: int = 5, warmup: int = 2,
-                  **kw) -> tuple[float, float]:
-    """``(first_ms, steady_ms)`` — the first call (which pays trace +
-    compile) timed separately from the steady-state median, so tables
-    never mix one-off compilation cost into per-step numbers.
-
-    ``warmup`` counts total pre-measurement calls (the first, timed one
-    included); ``steady_ms`` is the median of ``iters`` calls after it."""
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(*args, **kw))
-    first = (time.perf_counter() - t0) * 1e3
-    for _ in range(max(warmup - 1, 0)):
-        jax.block_until_ready(fn(*args, **kw))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kw))
-        times.append((time.perf_counter() - t0) * 1e3)
-    times.sort()
-    return first, times[len(times) // 2]
-
-
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
-    """Median steady-state wall-time per call in ms (jit-compatible:
-    blocks on result; compilation excluded — see :func:`time_fn_split`)."""
-    return time_fn_split(fn, *args, iters=iters, warmup=warmup, **kw)[1]
+__all__ = ["time_fn", "time_fn_split", "Csv"]
 
 
 class Csv:

@@ -24,12 +24,13 @@ def main(argv=None) -> int:
 
     from . import (dispatch_overhead, fig13_scaling, table2_saxpy,
                    table3_particle, table4_flux, table5_eikonal,
-                   table_layout)
+                   table_layout, table_tuned)
     jobs = [
         ("Dispatch overhead (region compiler vs per-segment)",
          lambda: dispatch_overhead.main(
              steps=30 if not args.full else 100,
              n=4096 if not args.full else 1 << 20)),
+        ("Tuned vs heuristic (measured autotuner)", table_tuned.main),
         ("Layout table (AoS/SoA/AoSoA)", lambda: table_layout.main(
             saxpy_n=1 << 18 if not args.full else 1 << 22,
             particle_n=65_536 if not args.full else 1_048_576,

@@ -1,6 +1,10 @@
 """Quickstart: the Ripple core API in five minutes (paper Listings 1-9).
 
   PYTHONPATH=src python examples/quickstart.py
+
+The block between the ``--8<-- [start:readme]`` markers is embedded
+verbatim in README.md; ``tests/test_docstrings.py`` asserts the two stay
+in sync (a tested doc-example).
 """
 
 import jax.numpy as jnp
@@ -26,17 +30,28 @@ assert float(soa.field("pressure")[0, 0]) == 2.0  # accessors hide layout
 
 # ---------------------------------------------------------------------------
 # 2. Tensors + graphs (paper Listing 7): SAXPY as a split node
+#    (this block is the README's tested quickstart snippet)
 # ---------------------------------------------------------------------------
+# --8<-- [start:readme]
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DistTensor, Executor, Graph
+
 size = 1024
 x = DistTensor("x", (size,))
 y = DistTensor("y", (size,))
 
 g = Graph()
-g.split(lambda a, xs, ys: a * xs + ys, 2.0, x, y)
-state = execute(g, x=jnp.arange(size, dtype=jnp.float32),
-                y=jnp.ones(size, jnp.float32))
-print("saxpy ok:", bool((np.asarray(state["y"])
-                         == 2 * np.arange(size) + 1).all()))
+g.split(lambda a, xs, ys: a * xs + ys, 2.0, x, y)   # writes y (last arg)
+
+ex = Executor(g)            # tune="auto" would measure layouts/tiles too
+state = ex.init_state(x=jnp.arange(size, dtype=jnp.float32),
+                      y=jnp.ones(size, jnp.float32))
+state = ex.run(state, steps=1)
+assert (np.asarray(state["y"]) == 2 * np.arange(size) + 1).all()
+print(ex.plan.describe())   # schedule + regions + cache + tuning report
+# --8<-- [end:readme]
 
 # ---------------------------------------------------------------------------
 # 3. Reduction + conditional (paper Listings 8/9): map-reduce loop
@@ -95,6 +110,14 @@ g.split(lambda r: r.set_field("density", r.field("density") * 2.0),
 ex = Executor(g)
 print("solver choice:", ex.plan.per_segment[0]["q"])        # Layout.AOSOA
 print("relayout steps:", ex.plan.relayouts)                 # [] (one segment)
+
+# (c) Measured: Executor(tune="auto") benchmarks the halo-feasible
+# layouts per state key (x each kernel's tile_candidates()) with real
+# timed executions, commits the argmin, and persists the decision in
+# ~/.cache/repro-tune (or $REPRO_TUNE_CACHE) so the next process loads
+# it with zero re-measurement:
+ex = Executor(g, tune="auto")
+print(ex.plan.describe_tuning())
 
 print("\nOn a mesh, DistTensor(partition=('data',)) shards the space and")
 print("the same graph runs SPMD with ppermute halo exchange - see")

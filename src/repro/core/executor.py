@@ -91,16 +91,18 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map_compat
+from ..tuning.tiles import tile_scope
 from . import halo as halo_lib
 from . import schedule as schedule_lib
 from .graph import AccessMode, Graph, Node, TensorArg
-from .layout import Layout, RecordArray, relayout, relayout_data
+from .layout import (Layout, RecordArray, relayout, relayout_data,
+                     storage_candidates)
 from .schedule import Region, ScheduleDag
 from .tensor import DistTensor, ReductionResult
 
 __all__ = ["Executor", "execute", "make_mesh", "LayoutPlan", "RelayoutStep",
            "HaloTransfer", "OverlapFallback", "solve_layouts",
-           "plan_signature", "ExecutableCacheEntry",
+           "layout_candidates", "plan_signature", "ExecutableCacheEntry",
            "clear_executable_cache", "executable_cache_stats"]
 
 # version-guarded shard_map accepting the modern kwarg set — bound here so
@@ -243,7 +245,11 @@ class LayoutPlan:
     executables, ``signature`` the plan-signature digest keying the
     process-wide executable cache, and ``cache`` the live cache entry
     (builds / reuse hits / trace events) — all rendered by
-    :meth:`describe_dag`."""
+    :meth:`describe_dag`.  ``tuning`` is the measured autotuner's
+    :class:`~repro.tuning.search.TuningDecision` when the Executor was
+    constructed with ``tune="load"``/``"auto"`` (None when tuning is
+    off); :meth:`describe_tuning` renders what was measured, what was
+    chosen, and why, and :meth:`describe` renders the whole plan."""
 
     per_segment: list[dict[str, Layout]] = dfield(default_factory=list)
     initial: dict[str, Layout] = dfield(default_factory=dict)
@@ -254,22 +260,47 @@ class LayoutPlan:
     regions: list[Region] = dfield(default_factory=list)
     signature: str = ""
     cache: Optional["ExecutableCacheEntry"] = None
+    tuning: Optional[Any] = None
 
     def transfers_for_segment(self, segment: int) -> list[HaloTransfer]:
+        """The scheduled halo blocks entering one segment (see
+        :class:`HaloTransfer`)."""
         return [h for h in self.halo_transfers if h.segment == segment]
 
     def describe_dag(self) -> str:
+        """Render the dependency DAG with its segment/wave placement,
+        relayout steps, hoisted halo blocks, region grouping, and
+        executable-cache state (see ``core/schedule.py``)."""
         if self.dag is None:
             return "(no dependency DAG recorded)"
         return self.dag.describe(plan=self)
 
     def describe_transfers(self) -> str:
+        """One line per scheduled halo block plus every declined overlap
+        request with its reason."""
         if not self.halo_transfers:
             return "(no scheduled halo transfers)"
         lines = [h.describe() for h in self.halo_transfers]
         lines += [f"seg{f.segment} {f.node}: overlap fallback — {f.reason}"
                   for f in self.overlap_fallbacks]
         return "\n".join(lines)
+
+    def describe_tuning(self) -> str:
+        """Render the measured autotuner's decision for this plan: the
+        baseline-vs-tuned steady-state times, every candidate measured
+        (layout per state key, tile per kernel) and which won.  With
+        tuning off, says so and how to turn it on."""
+        if self.tuning is None:
+            return ("(no measured tuning: heuristic layout solver and "
+                    "default kernel tiles — construct the Executor with "
+                    "tune=\"auto\" to measure)")
+        return self.tuning.describe()
+
+    def describe(self) -> str:
+        """The full plan, human-readable: schedule + transfers + regions
+        + cache state (:meth:`describe_dag`) followed by the tuning
+        report (:meth:`describe_tuning`)."""
+        return f"{self.describe_dag()}\n{self.describe_tuning()}"
 
 
 def _segment_nodes(kind: str, payload):
@@ -293,11 +324,11 @@ def _graph_nodes(g: Graph):
 
 def _clamp_layout(t: DistTensor, lay: Layout) -> Layout:
     """AoSoA cannot carry halo/partition on the tiled (last) dim; fall back
-    to SoA (the per-axis layout the halo machinery favors) when it would."""
+    to SoA (the per-axis layout the halo machinery favors) when it would
+    (feasibility rule: ``core/layout.py``'s :func:`storage_candidates`)."""
     if lay is not Layout.AOSOA or not t.is_record:
         return lay
-    nd = len(t.space)
-    if t.halo[nd - 1] or t.partition[nd - 1] is not None:
+    if lay not in storage_candidates(t.space, t.halo, t.partition):
         return Layout.SOA
     return lay
 
@@ -581,15 +612,61 @@ def plan_signature(executor: "Executor") -> tuple:
     """Structural identity of a compiled plan: graph structure (node
     kinds, args, function code + closures — NOT auto-generated node
     names), tensor shapes/dtypes/layouts, mesh, schedule mode, per-
-    segment layout decisions, and donation.  Two executors with equal
-    signatures compute identical values for identical inputs, so their
-    compiled region executables are interchangeable."""
+    segment layout decisions, kernel tile overrides, and donation.  Two
+    executors with equal signatures compute identical values for
+    identical inputs, so their compiled region executables are
+    interchangeable.  Tile overrides are part of the key because they
+    change the Pallas programs traced into a region executable (the
+    autotuner relies on this: candidate configurations never alias)."""
     plan = executor.plan
-    return ("ripple-plan-v1", executor.schedule, executor.donate,
+    return ("ripple-plan-v2", executor.schedule, executor.donate,
             _mesh_sig(executor.mesh), _segments_sig(executor._segments),
             tuple(tuple(sorted((n, l.name) for n, l in seg.items()))
                   for seg in plan.per_segment),
-            tuple(sorted((n, l.name) for n, l in plan.initial.items())))
+            tuple(sorted((n, l.name) for n, l in plan.initial.items())),
+            tuple(sorted((str(k), _sig_value(v))
+                         for k, v in executor._tile_config.items())))
+
+
+def layout_candidates(executor: "Executor") -> dict[str, tuple[Layout, ...]]:
+    """The measured autotuner's layout search space (``repro.tuning``).
+
+    For every record state key that is neither user-pinned nor already
+    forced by a layout override: the halo-feasible storage layouts
+    (``core/layout.py``'s :func:`storage_candidates`, additionally
+    clamped by every *access* of the key — any haloed access vetoes
+    AoSoA for the shared storage, exactly the PR-1 solver's rule — and
+    validated against the mesh).  Keys with a single feasible layout
+    are omitted: there is nothing to search."""
+    no_aosoa: set[str] = set()
+    seen: set[str] = set()
+    for kind, payload in executor._segments:
+        for node in _segment_nodes(kind, payload):
+            for a in node.args:
+                t = a.tensor if isinstance(a, TensorArg) else a
+                if not isinstance(t, DistTensor) or not t.is_record:
+                    continue
+                seen.add(t.name)
+                if _clamp_layout(t, Layout.AOSOA) is not Layout.AOSOA:
+                    no_aosoa.add(t.name)
+    out: dict[str, tuple[Layout, ...]] = {}
+    for name in sorted(seen):
+        t = executor.tensors[name]
+        if t.pin_layout or name in executor._layout_overrides:
+            continue
+        cands = []
+        for lay in storage_candidates(t.space, t.halo, t.partition):
+            if lay is Layout.AOSOA and name in no_aosoa:
+                continue
+            if executor.mesh is not None:
+                try:
+                    t.with_(layout=lay).validate_mesh(executor.mesh)
+                except ValueError:
+                    continue
+            cands.append(lay)
+        if len(cands) > 1:
+            out[name] = tuple(cands)
+    return out
 
 
 # -- process-wide executable cache ---------------------------------------------
@@ -720,20 +797,54 @@ class Executor:
     Both schedules (and both region modes) produce bitwise-identical
     state for any valid graph; the DAG schedule just gives XLA more to
     overlap per dispatch, and regions cut the per-step dispatch count.
+
+    ``tune`` selects the measured autotuner (``repro.tuning``):
+
+    * ``"off"`` (default) — heuristic layout solver, default kernel
+      tiles (exactly the pre-tuner behavior);
+    * ``"load"`` — apply a tuned configuration from the persistent
+      cache when one exists for this plan signature × device × jax
+      version; fall back to heuristics on a miss (never measures —
+      safe for latency-sensitive construction paths);
+    * ``"auto"`` — like ``"load"``, but on a cache miss benchmark
+      candidate configurations (per-key halo-feasible layouts × per-
+      kernel ``tile_candidates()``) with real timed executions of the
+      region executables, commit the argmin into the plan, and persist
+      it, so the *next* construction — this process or another — pays
+      zero measurements.
+
+    ``plan.describe_tuning()`` renders the decision;
+    ``tile_overrides`` forces specific kernel tiles (kernel name ->
+    tile config, what the tuner itself uses to stage candidates), and
+    ``tune_inputs`` optionally supplies ``init_state`` overrides for
+    the tuner's timed executions so measurement runs on realistic data.
+
+    Example::
+
+        ex = Executor(graph, tune="auto")     # measures once, persists
+        print(ex.plan.describe_tuning())      # what won, and why
+        ex2 = Executor(graph, tune="auto")    # cache hit: 0 measurements
     """
 
     def __init__(self, graph: Graph, mesh: Optional[Mesh] = None,
                  donate: bool = True,
                  layout_overrides: Optional[dict[str, Layout]] = None,
-                 schedule: str = "dag", regions: bool = True):
+                 schedule: str = "dag", regions: bool = True,
+                 tune: str = "off",
+                 tile_overrides: Optional[dict[str, Any]] = None,
+                 tune_inputs: Optional[dict[str, Any]] = None):
         if schedule not in ("dag", "sequential"):
             raise ValueError(
                 f"schedule must be 'dag' or 'sequential', got {schedule!r}")
+        if tune not in ("off", "load", "auto"):
+            raise ValueError(
+                f"tune must be 'off', 'load' or 'auto', got {tune!r}")
         self.graph = graph
         self.mesh = mesh
         self.donate = donate
         self.schedule = schedule
         self.regions_enabled = bool(regions)
+        self.tune = tune
         self.tensors = graph.all_tensors()
         self.results = graph.all_results()
         self.dag = schedule_lib.build_dag(graph)
@@ -742,22 +853,45 @@ class Executor:
         else:
             self._segments = schedule_lib.sequential_segments(graph)
             schedule_lib.place_units(self.dag, self._segments)
-        self.plan = solve_layouts(self._segments, self.tensors,
-                                  overrides=layout_overrides)
-        self.plan.dag = self.dag
         self._sharded = mesh is not None and any(
             ax is not None for t in self.tensors.values()
             for ax in t.partition)
+        self._layout_overrides = dict(layout_overrides or {})
+        self._tile_config = dict(tile_overrides or {})
+        self._tune_inputs = dict(tune_inputs or {})
+        self._build_plan()
+        if tune != "off":
+            from ..tuning.search import resolve_tuning
+
+            decision = resolve_tuning(self, tune)
+            if decision.applied:
+                # rebuild the plan under the measured-best configuration
+                # (relayout steps, halo schedule, signature and cache
+                # entry all follow the tuned layouts/tiles)
+                self._layout_overrides.update(decision.layouts)
+                self._tile_config.update(decision.tiles)
+                self._build_plan()
+            self.plan.tuning = decision
+
+    def _build_plan(self) -> None:
+        """Solve layouts under the current overrides and derive everything
+        that depends on them: halo/overlap schedule, region grouping,
+        plan signature, executable-cache entry.  Run once at
+        construction, and a second time when the autotuner commits a
+        configuration that differs from the heuristics."""
+        self.plan = solve_layouts(self._segments, self.tensors,
+                                  overrides=self._layout_overrides)
+        self.plan.dag = self.dag
         # physical layout of each record tensor's state entry right now
         self._state_layouts: dict[str, Layout] = dict(self.plan.initial)
-        if mesh is not None:
+        if self.mesh is not None:
             for name, t in self.tensors.items():
                 lays = {self.plan.initial.get(name, t.layout)}
                 lays.update(seg[name] for seg in self.plan.per_segment
                             if name in seg)
                 for lay in lays:
                     (t.with_(layout=lay) if t.is_record
-                     else t).validate_mesh(mesh)
+                     else t).validate_mesh(self.mesh)
         self._overlap_decisions: dict[str, _OverlapDecision] = {}
         self._collect_halo_schedule()
         # region compiler: segment runs -> fused executables, cached
@@ -953,6 +1087,8 @@ class Executor:
             f"(pass a RecordArray to make the layout explicit)")
 
     def state_shardings(self, state: dict) -> dict:
+        """NamedSharding per state entry (None entries without a mesh) —
+        what ``jax.device_put`` placement of a checkpoint should use."""
         if self.mesh is None:
             return {k: None for k in state}
         out = {}
@@ -974,6 +1110,12 @@ class Executor:
         segment entry, the region grouping, and the executable-cache
         state (see ``core/schedule.py``)."""
         return self.plan.describe_dag()
+
+    def describe_tuning(self) -> str:
+        """Render the measured autotuner's decision for this plan
+        (``plan.describe_tuning()``): baseline vs tuned steady-state
+        times, every measured candidate, and what was committed."""
+        return self.plan.describe_tuning()
 
     def cache_stats(self) -> dict:
         """Live executable-cache stats for this plan signature.
@@ -1030,9 +1172,9 @@ class Executor:
 
         vals = self._resolve_args(node, state, sharded, layouts)
         out = node.fn(*vals)
-        self._store_writes(node, state, write_tensors, out)
+        self._store_writes(node, state, write_tensors, out, layouts)
 
-    def _store_writes(self, node, state, write_tensors, out) -> None:
+    def _store_writes(self, node, state, write_tensors, out, layouts) -> None:
         if not write_tensors:
             return
         if len(write_tensors) == 1:
@@ -1042,8 +1184,21 @@ class Executor:
                 f"{node.name}: fn returned {len(out)} values for "
                 f"{len(write_tensors)} writes")
         for t, v in zip(write_tensors, out):
-            data = v.data if isinstance(v, RecordArray) else jnp.asarray(v)
-            state[t.name] = data
+            state[t.name] = self._coerce_write(t, v, layouts)
+
+    def _coerce_write(self, t, v, layouts: dict[str, Layout]):
+        """Raw storage for one written value.  A RecordArray output that
+        disagrees with the segment's assigned layout for the write tensor
+        is converted in-trace — a node fn returns records in whatever
+        layout it computed them (usually its input's), and the plan's
+        per-key layout choice (heuristic or tuned) must win."""
+        if isinstance(v, RecordArray):
+            if t.is_record:
+                want = layouts.get(t.name, t.layout)
+                if v.layout is not want:
+                    v = relayout(v, want)
+            return v.data
+        return jnp.asarray(v)
 
     def _lower_split_overlapped(self, node: Node, state: dict,
                                 write_tensors,
@@ -1134,8 +1289,8 @@ class Executor:
                 raise ValueError(
                     f"{node.name}: fn returned {len(out)} values for "
                     f"{len(write_tensors)} writes")
-            return [v.data if isinstance(v, RecordArray) else jnp.asarray(v)
-                    for v in out]
+            return [self._coerce_write(wt, v, layouts)
+                    for wt, v in zip(write_tensors, out)]
 
         interior = run("interior")
         strip_outs = {
@@ -1200,7 +1355,7 @@ class Executor:
                         wt.append(a.tensor if isinstance(a, TensorArg) else a)
                     out = node.fn(*vals) if node.fn is not None else None
                     if wt:
-                        self._store_writes(node, tmp, wt, out)
+                        self._store_writes(node, tmp, wt, out, layouts)
                         for t in wt:
                             state[t.name] = tmp[t.name]
                 else:
@@ -1218,7 +1373,8 @@ class Executor:
             sub = self._sub_execs[i] = Executor(
                 payload, self.mesh, donate=False,
                 layout_overrides=self.plan.per_segment[i],
-                schedule=self.schedule, regions=self.regions_enabled)
+                schedule=self.schedule, regions=self.regions_enabled,
+                tile_overrides=self._tile_config)
         return sub
 
     def _lower_loop(self, sub_graph: Graph, seg: int, state: dict) -> dict:
@@ -1342,11 +1498,15 @@ class Executor:
 
         jfn = jax.jit(region_call,
                       donate_argnums=(0,) if self.donate else ())
+        tile_config = self._tile_config
 
         def invoke(state):
             donated = {k: v for k, v in state.items() if k in donate_keys}
             kept = {k: v for k, v in state.items() if k not in donate_keys}
-            return jfn(donated, kept)
+            # the (tuned) tile config only matters while the body traces;
+            # steady-state calls hit the jit cache and never read it
+            with tile_scope(tile_config):
+                return jfn(donated, kept)
 
         invoke.jit_fn = jfn
         invoke.donate_keys = donate_keys
@@ -1371,7 +1531,8 @@ class Executor:
         fn, _ = self._region_executable(region)
         donated = {k: v for k, v in state.items() if k in fn.donate_keys}
         kept = {k: v for k, v in state.items() if k not in fn.donate_keys}
-        return fn.jit_fn.lower(donated, kept).compile().as_text()
+        with tile_scope(self._tile_config):
+            return fn.jit_fn.lower(donated, kept).compile().as_text()
 
     # -- segment compilation (regions=False per-segment dispatch) -----------
     def _device_fn(self, levels) -> Callable:
@@ -1464,12 +1625,14 @@ class Executor:
                 fn = self._jitted.get(i)
                 if fn is None:
                     fn = self._jitted[i] = self._device_fn(payload)
-                state = fn(state)
+                with tile_scope(self._tile_config):
+                    state = fn(state)
             elif kind == "loop":
                 fn = self._jitted.get(i)
                 if fn is None:
                     fn = self._jitted[i] = self._loop_fn(payload, i)
-                state = fn(state)
+                with tile_scope(self._tile_config):
+                    state = fn(state)
             elif kind == "host_loop":
                 sub_exec = self._sub_executor(i)
                 # while semantics: check before the first iteration too
@@ -1545,11 +1708,13 @@ class Executor:
             return lax.fori_loop(0, steps, body, state)
 
         jfn = jax.jit(call, donate_argnums=(0,) if self.donate else ())
+        tile_config = self._tile_config
 
         def invoke(state, steps):
             donated = {k: v for k, v in state.items() if k in donate_keys}
             kept = {k: v for k, v in state.items() if k not in donate_keys}
-            return jfn(donated, kept, jnp.asarray(steps, jnp.int32))
+            with tile_scope(tile_config):
+                return jfn(donated, kept, jnp.asarray(steps, jnp.int32))
 
         invoke.jit_fn = jfn
         invoke.donate_keys = donate_keys

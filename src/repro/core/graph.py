@@ -111,22 +111,50 @@ def preferred_layout(t: DistTensor | TensorArg,
 
 
 def concurrent_padded_access(t: DistTensor) -> TensorArg:
+    """Mark ``t`` as read *including its halo*, written elsewhere.
+
+    The defining access mode of a double-buffered stencil: because the
+    node writes a different buffer, the halo exchange may overlap the
+    kernel's interior compute (``g.split(..., overlap=True)``).
+
+    Example::
+
+        g.split(laplace, concurrent_padded_access(src), dst, overlap=True)
+    """
     return TensorArg(t, AccessMode.CONCURRENT_PADDED)
 
 
 def exclusive_padded_access(t: DistTensor) -> TensorArg:
+    """Mark ``t`` as read including its halo by a node that ALSO updates
+    ``t`` in place (paper Fig. 9): the pre-update halo must be captured
+    before the write, so the executor threads it as an extra data
+    dependency instead of overlapping it.
+
+    Example::
+
+        g.split(fim_sweep, exclusive_padded_access(phi), mask, writes=(0,))
+    """
     return TensorArg(t, AccessMode.EXCLUSIVE_PADDED)
 
 
 def in_shared(t: DistTensor) -> TensorArg:
+    """Mark ``t`` for staging through shared memory (VMEM on TPU): the
+    kernel's Pallas path DMAs each block into the fast on-chip space
+    before computing (paper's ``in_shared()``).  Example:
+    ``g.split(kern, in_shared(u), out)``."""
     return TensorArg(t, AccessMode.SHARED)
 
 
 def concurrent_padded_access_in_shared(t: DistTensor) -> TensorArg:
+    """:func:`concurrent_padded_access` + :func:`in_shared`: halo read of
+    a separately-written buffer, blocks staged in VMEM (the paper's
+    combined modifier, e.g. the FORCE stencil's winning config)."""
     return TensorArg(t, AccessMode.CONCURRENT_PADDED_SHARED)
 
 
 def exclusive_padded_access_in_shared(t: DistTensor) -> TensorArg:
+    """:func:`exclusive_padded_access` + :func:`in_shared`: in-place halo
+    read with VMEM staging (the eikonal FIM kernel's configuration)."""
     return TensorArg(t, AccessMode.EXCLUSIVE_PADDED_SHARED)
 
 
@@ -140,18 +168,23 @@ class Reducer:
 
 
 def SumReducer() -> Reducer:  # noqa: N802 - mirrors paper naming
+    """Sum reduction: ``jnp.sum`` per shard + ``lax.psum`` across shards.
+    Example: ``g.then_reduce(t, total, SumReducer())``."""
     import jax.numpy as jnp
 
     return Reducer("sum", jnp.sum, "add")
 
 
 def MaxReducer() -> Reducer:  # noqa: N802
+    """Max reduction: ``jnp.max`` per shard + ``lax.pmax`` across shards
+    (e.g. the Euler wavespeed CFL bound)."""
     import jax.numpy as jnp
 
     return Reducer("max", jnp.max, "max")
 
 
 def MinReducer() -> Reducer:  # noqa: N802
+    """Min reduction: ``jnp.min`` per shard + ``lax.pmin`` across shards."""
     import jax.numpy as jnp
 
     return Reducer("min", jnp.min, "min")
@@ -288,12 +321,23 @@ class Graph:
                    exec_kind: Optional[ExecutionKind] = None,
                    overlap: bool = False,
                    layout: Optional[Layout] = None) -> "Graph":
+        """:meth:`split` on a *new* level (sequential dependency on the
+        current one)."""
         self._new_level()
         return self.split(fn, *args, writes=writes, exec_kind=exec_kind,
                           overlap=overlap, layout=layout)
 
     def reduce(self, tensor: DistTensor, result: ReductionResult,
                reducer: Reducer, field: Optional[str] = None) -> "Graph":
+        """Reduce ``tensor`` (or one record ``field`` of it) into the
+        ``result`` slot on the current level (paper Listing 8):
+        ``reducer.local`` per shard, ``lax.p*`` across the mesh.
+
+        Example::
+
+            total = make_reduction_result("total")
+            g.then_reduce(t, total, SumReducer())   # state["total"]
+        """
         self._current_level().append(
             Node(kind="reduce", args=(tensor, field), reducer=reducer,
                  result=result, exec_kind=ExecutionKind.Gpu))
@@ -301,6 +345,7 @@ class Graph:
 
     def then_reduce(self, tensor: DistTensor, result: ReductionResult,
                     reducer: Reducer, field: Optional[str] = None) -> "Graph":
+        """:meth:`reduce` on a *new* level (sequential dependency)."""
         self._new_level()
         return self.reduce(tensor, result, reducer, field)
 
@@ -322,10 +367,14 @@ class Graph:
 
     # -- introspection ---------------------------------------------------------
     def nodes(self):
+        """Every node in builder (program) order, levels flattened."""
         for level in self.levels:
             yield from level
 
     def all_tensors(self) -> dict[str, DistTensor]:
+        """Every :class:`DistTensor` the graph touches, by name
+        (subgraphs included).  Two accesses of one name must agree on
+        storage (space/layout/partition); halo may differ per access."""
         out: dict[str, DistTensor] = {}
         for node in self.nodes():
             if node.subgraph is not None:
@@ -342,6 +391,7 @@ class Graph:
         return out
 
     def all_results(self) -> dict[str, ReductionResult]:
+        """Every reduction-result slot the graph writes, by name."""
         out: dict[str, ReductionResult] = {}
         for node in self.nodes():
             if node.subgraph is not None:
@@ -351,6 +401,8 @@ class Graph:
         return out
 
     def is_device_only(self) -> bool:
+        """True when no node needs the host (no ``sync()``, no Cpu
+        nodes) — the whole graph can trace into one jitted program."""
         for node in self.nodes():
             if node.kind == "sync":
                 return False
@@ -361,6 +413,7 @@ class Graph:
         return True
 
     def summary(self) -> str:
+        """One line per node: level, kind, and the tensors it touches."""
         lines = [f"Graph {self.name!r} ({len(self.levels)} levels)"]
         for i, level in enumerate(self.levels):
             for n in level:

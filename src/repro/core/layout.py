@@ -57,6 +57,7 @@ __all__ = [
     "relayout",
     "relayout_data",
     "dispatch_with_relayout",
+    "storage_candidates",
     "aosoa_tile",
     "AOSOA_LANE",
     "record_grid_1d",
@@ -130,10 +131,12 @@ class RecordSpec:
 
     @property
     def num_components(self) -> int:
+        """Total scalar components per record (vector fields flattened)."""
         return sum(f.size for f in self.fields)
 
     @property
     def names(self) -> tuple[str, ...]:
+        """Field names in declaration order."""
         return tuple(f.name for f in self.fields)
 
     def offset(self, name: str) -> tuple[int, int]:
@@ -166,10 +169,14 @@ class RecordArray:
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
+        """Pytree protocol: the backing array is the single leaf, spec +
+        layout ride as static aux data (so RecordArrays flow through
+        jit / shard_map / grad)."""
         return (self.data,), (self.spec, self.layout)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from (spec, layout) aux + data leaf."""
         spec, layout = aux
         return cls(children[0], spec, layout)
 
@@ -236,6 +243,7 @@ class RecordArray:
     # -- basic properties -------------------------------------------------
     @property
     def space(self) -> tuple[int, ...]:
+        """The logical N-d space extents (layout-independent)."""
         if self.layout is Layout.AOS:
             return self.data.shape[:-1]
         if self.layout is Layout.SOA:
@@ -245,10 +253,12 @@ class RecordArray:
 
     @property
     def dtype(self):
+        """Element dtype of the backing storage."""
         return self.data.dtype
 
     @property
     def num_components(self) -> int:
+        """Total scalar components per record (see RecordSpec)."""
         return self.spec.num_components
 
     def __repr__(self) -> str:
@@ -273,6 +283,9 @@ class RecordArray:
     f = field  # short alias used heavily in kernels/examples
 
     def set_field(self, name: str, value: jax.Array) -> "RecordArray":
+        """A new RecordArray with field ``name`` replaced by ``value``
+        (shape ``(*space,)`` or ``(*space, size)``) — the functional
+        counterpart of :meth:`field`, layout handled internally."""
         start, size = self.spec.offset(name)
         value = jnp.asarray(value, dtype=self.dtype)
         if size == 1 and value.ndim == len(self.space):
@@ -296,6 +309,8 @@ class RecordArray:
         return RecordArray(data, self.spec, self.layout)
 
     def to_fields(self) -> dict[str, jax.Array]:
+        """All fields as a name -> array dict (layout-independent
+        values; the inverse of :meth:`from_fields`)."""
         return {f.name: self.field(f.name) for f in self.spec.fields}
 
     # -- layout interop (paper: "interoperability of the layouts") ---------
@@ -374,6 +389,33 @@ def relayout_data(data, spec: RecordSpec, src: Layout, dst: Layout):
     if src is dst:
         return data
     return RecordArray(data, spec, src).with_layout(dst).data
+
+
+def storage_candidates(space: Sequence[int], halo: Sequence[int] = (),
+                       partition: Sequence = ()) -> tuple[Layout, ...]:
+    """The layouts a record over ``space`` can physically be stored in.
+
+    AoS and SoA are always feasible.  AoSoA tiles the LAST space dim
+    across two storage axes, so it is excluded whenever that dim carries
+    a halo or a mesh partition (per-axis ops — halo exchange, sharding —
+    cannot address it); this is the same rule the executor's layout
+    solver clamps with, and the candidate set the measured autotuner
+    (``repro.tuning``) searches over.
+
+    Example::
+
+        >>> storage_candidates((4, 256))
+        (Layout.AOS, Layout.SOA, Layout.AOSOA)
+        >>> storage_candidates((4, 256), halo=(0, 1))
+        (Layout.AOS, Layout.SOA)
+    """
+    space = tuple(space)
+    nd = len(space)
+    halo = tuple(halo) or (0,) * nd
+    partition = tuple(partition) or (None,) * nd
+    if halo[nd - 1] or partition[nd - 1] is not None:
+        return (Layout.AOS, Layout.SOA)
+    return (Layout.AOS, Layout.SOA, Layout.AOSOA)
 
 
 def dispatch_with_relayout(kernel_fn, rec: RecordArray, *args,

@@ -31,7 +31,22 @@ __all__ = ["DistTensor", "ReductionResult", "make_reduction_result"]
 
 @dataclass(frozen=True)
 class DistTensor:
-    """Handle for a partitioned, haloed, layout-polymorphic tensor."""
+    """Handle for a partitioned, haloed, layout-polymorphic tensor.
+
+    Describes a logical N-d space — record spec + storage layout,
+    per-dim mesh partitioning, per-dim halo widths and the boundary
+    policy — while the storage itself lives in the executor's state
+    dict as a raw ``jax.Array``.
+
+    Example::
+
+        mesh = make_mesh((4,), ("d",))
+        u = DistTensor("u", (1024, 1024), partition=("d",), halo=(1,),
+                       boundary=Boundary.PERIODIC)
+        # record cells with a pinned AoS layout:
+        p = DistTensor("p", (65536,), spec=RecordSpec.create("x", "y"),
+                       layout=Layout.AOS, pin_layout=True)
+    """
 
     name: str
     space: tuple[int, ...]
@@ -56,10 +71,15 @@ class DistTensor:
     # -- shape/layout ----------------------------------------------------
     @property
     def is_record(self) -> bool:
+        """True when cells are records (``spec`` given) rather than
+        scalars — only record tensors participate in layout solving."""
         return self.spec is not None
 
     @property
     def storage_shape(self) -> tuple[int, ...]:
+        """Shape of the backing array under the declared layout (AoS
+        appends the component axis, SoA prepends it, AoSoA tiles the
+        last space dim)."""
         if not self.is_record:
             return self.space
         return RecordArray.storage_shape(self.spec, self.space, self.layout)
@@ -93,18 +113,24 @@ class DistTensor:
         return P(*dims)
 
     def sharding(self, mesh: Mesh) -> NamedSharding:
+        """The NamedSharding placing this tensor's storage on ``mesh``."""
         return NamedSharding(mesh, self.pspec())
 
     def shards_along(self, mesh: Mesh, dim: int) -> int:
+        """How many shards space dim ``dim`` splits into on ``mesh``."""
         ax = self.partition[dim]
         return 1 if ax is None else mesh.shape[ax]
 
     def shard_space(self, mesh: Mesh) -> tuple[int, ...]:
+        """The per-shard space extents on ``mesh``."""
         return tuple(
             s // self.shards_along(mesh, d) for d, s in enumerate(self.space)
         )
 
     def validate_mesh(self, mesh: Mesh) -> None:
+        """Raise ``ValueError`` when this handle cannot live on ``mesh``:
+        unknown axis, non-divisible extent, shard smaller than its halo,
+        or AoSoA carrying halo/partition on the tiled dim."""
         if self.is_record and self.layout is Layout.AOSOA:
             nd = len(self.space)
             if self.partition[nd - 1] is not None:
@@ -147,11 +173,16 @@ class DistTensor:
         return arr
 
     def wrap(self, data: jax.Array) -> jax.Array | RecordArray:
+        """View raw state storage through this handle (a
+        :class:`RecordArray` for record tensors, pass-through
+        otherwise) — e.g. ``ex.read(state, t)``."""
         if self.is_record:
             return RecordArray(data, self.spec, self.layout)
         return data
 
     def with_(self, **kw) -> "DistTensor":
+        """A copy of this handle with fields replaced, e.g.
+        ``t.with_(layout=Layout.SOA)`` (handles are frozen)."""
         return replace(self, **kw)
 
     def storage_key(self) -> tuple:
@@ -182,4 +213,12 @@ class ReductionResult:
 def make_reduction_result(
     name: str, init: float = 0.0, dtype: Any = jnp.float32
 ) -> ReductionResult:
+    """Declare a named reduction slot for ``Graph.reduce`` to fill.
+
+    Example::
+
+        total = make_reduction_result("total")
+        g.then_reduce(t, total, SumReducer())
+        state = execute(g)          # state["total"] holds the sum
+    """
     return ReductionResult(name=name, dtype=dtype, init=init)

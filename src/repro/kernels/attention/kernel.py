@@ -29,7 +29,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.tuning.tiles import register_tile_kernel
+
 NEG_INF = -1e30
+
+TILE_KERNEL = "attention"  # name in the autotuner's tile registry
+DEFAULT_BLOCKS = (128, 128)
+
+
+def tile_candidates(shape: tuple[int, ...]) -> tuple[tuple[int, int], ...]:
+    """Feasible ``(block_q, block_k)`` pairs for query/kv sequence
+    lengths ``(sq, skv)`` (the autotuner's search axis): MXU-aligned
+    multiples of 64 that tile both sequences exactly."""
+    sq, skv = shape
+    return tuple((bq, bk)
+                 for bq in (64, 128, 256) if bq <= sq and sq % bq == 0
+                 for bk in (64, 128, 256) if bk <= skv and skv % bk == 0)
+
+
+register_tile_kernel(TILE_KERNEL, tile_candidates)
 
 
 def _attn_kernel(

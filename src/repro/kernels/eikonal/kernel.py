@@ -24,6 +24,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.tuning.tiles import register_tile_kernel
+
+TILE_KERNEL = "eikonal"   # name in the autotuner's tile registry
+DEFAULT_BLOCK = (8, 128)
+
+
+def tile_candidates(shape: tuple[int, ...]) -> tuple[tuple[int, int], ...]:
+    """Feasible ``(bx, by)`` FIM tile shapes for an interior of
+    ``(nx, ny)`` cells (the autotuner's search axis).  Bigger tiles
+    amortize the frozen-halo inner sweeps over more cells (the paper's
+    ghost-zone trade); candidates tile the interior exactly."""
+    nx, ny = shape
+    return tuple((bx, by)
+                 for bx in (8, 16, 32, 64) if bx <= nx and nx % bx == 0
+                 for by in (64, 128, 256) if by <= ny and ny % by == 0)
+
+
+register_tile_kernel(TILE_KERNEL, tile_candidates)
+
 
 def godunov_update(phi: jax.Array, mask: jax.Array, h: float) -> jax.Array:
     """One Jacobi sweep on a haloed tile; interior cells updated only.

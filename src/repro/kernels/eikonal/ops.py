@@ -7,19 +7,37 @@ import jax
 
 from repro.core.graph import Graph, exclusive_padded_access
 from repro.core.tensor import DistTensor
-from .kernel import eikonal_fim_pallas
+from repro.tuning.tiles import resolve_tile
+from .kernel import DEFAULT_BLOCK, TILE_KERNEL, eikonal_fim_pallas
 from .ref import eikonal_fim_ref
 
 
 @partial(jax.jit,
          static_argnames=("h", "inner", "block", "use_pallas", "interpret"))
-def eikonal_fim_sweep(phi_haloed, source_mask, h, *, inner: int = 4,
-                      block=(8, 128), use_pallas: bool = True,
-                      interpret: bool = True):
+def _eikonal_fim_jit(phi_haloed, source_mask, h, *, inner: int, block,
+                     use_pallas: bool, interpret: bool):
     if use_pallas:
         return eikonal_fim_pallas(phi_haloed, source_mask, h, inner=inner,
                                   block=block, interpret=interpret)
     return eikonal_fim_ref(phi_haloed, source_mask, h, inner=inner, block=block)
+
+
+def eikonal_fim_sweep(phi_haloed, source_mask, h, *, inner: int = 4,
+                      block=None, use_pallas: bool = True,
+                      interpret: bool = True):
+    """``inner`` VMEM-staged FIM Jacobi sweeps per tile over a haloed
+    ``(nx+2, ny+2)`` level-set array (paper Table 5); returns the
+    updated ``(nx, ny)`` interior.
+
+    ``block=None`` resolves the ``(bx, by)`` tile through the
+    autotuner's ambient tile scope (``repro.tuning.tiles``); an explicit
+    ``block`` always wins, and outside any scope the kernel default
+    applies."""
+    interior = tuple(s - 2 for s in phi_haloed.shape)
+    block = resolve_tile(TILE_KERNEL, block, DEFAULT_BLOCK, shape=interior)
+    return _eikonal_fim_jit(phi_haloed, source_mask, h, inner=inner,
+                            block=block, use_pallas=use_pallas,
+                            interpret=interpret)
 
 
 def make_eikonal_graph(
@@ -30,7 +48,7 @@ def make_eikonal_graph(
     inner: int = 1,
     overlap: bool = True,
     use_pallas: bool = False,
-    block=(8, 128),
+    block=None,
     interpret: bool = True,
     graph: Optional[Graph] = None,
 ) -> Graph:

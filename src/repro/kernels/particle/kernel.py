@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.layout import (Layout, RecordArray, RecordRef, RecordSpec,
                                Vector, record_grid_1d)
+from repro.tuning.tiles import register_tile_kernel
 
 PARTICLE_SPEC = RecordSpec.create(Vector("x", 3), Vector("v", 3))
 
@@ -28,6 +29,20 @@ PARTICLE_SPEC = RecordSpec.create(Vector("x", 3), Vector("v", 3))
 # layout is not natively supported
 SUPPORTED_LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
 PREFERRED_LAYOUT = Layout.AOSOA
+TILE_KERNEL = "particle"  # name in the autotuner's tile registry
+DEFAULT_BLOCK = 512
+
+
+def tile_candidates(shape: tuple[int, ...]) -> tuple[int, ...]:
+    """Feasible particles-per-program block sizes for ``n`` particles
+    (the autotuner's search axis): exact tilings only, so no variant
+    ever needs the masked tail path."""
+    (n,) = shape
+    return tuple(b for b in (128, 256, 512, 1024, 2048, 4096)
+                 if b <= n and n % b == 0)
+
+
+register_tile_kernel(TILE_KERNEL, tile_candidates)
 
 
 def _particle_kernel(spec: RecordSpec, layout: Layout, dt_ref, p_ref, o_ref):

@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.layout import (Layout, RecordArray, RecordRef, RecordSpec,
                                record_grid_1d)
+from repro.tuning.tiles import register_tile_kernel
 
 # record form: x and y live in ONE record buffer (paper §4.2's layout axis
 # for Table 2); metadata consumed by the ops.py wrapper, which relayouts
@@ -28,6 +29,21 @@ from repro.core.layout import (Layout, RecordArray, RecordRef, RecordSpec,
 SAXPY_SPEC = RecordSpec.create("x", "y")
 SUPPORTED_LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
 PREFERRED_LAYOUT = Layout.SOA
+TILE_KERNEL = "saxpy"     # name in the autotuner's tile registry
+DEFAULT_BLOCK = 1024
+
+
+def tile_candidates(shape: tuple[int, ...]) -> tuple[int, ...]:
+    """Feasible VMEM block sizes for a 1-d record space of extent ``n``
+    (the autotuner's search axis for this kernel): lane-width multiples
+    that tile ``n`` exactly, the kernel's default included when it
+    fits."""
+    (n,) = shape
+    return tuple(b for b in (256, 512, 1024, 2048, 4096, 8192)
+                 if b <= n and n % b == 0)
+
+
+register_tile_kernel(TILE_KERNEL, tile_candidates)
 
 
 def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):

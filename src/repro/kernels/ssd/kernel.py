@@ -19,6 +19,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.tuning.tiles import register_tile_kernel
+
+TILE_KERNEL = "ssd"       # name in the autotuner's tile registry
+DEFAULT_CHUNK = 64
+
+
+def tile_candidates(shape: tuple[int, ...]) -> tuple[int, ...]:
+    """Feasible chunk lengths for a sequence of ``S`` positions (the
+    autotuner's search axis): the chunk is the L of the intra-chunk
+    quadratic part, so it trades MXU tile efficiency against the
+    O(L^2) score matrix; exact tilings only."""
+    (s,) = shape
+    return tuple(c for c in (32, 64, 128, 256) if c <= s and s % c == 0)
+
+
+register_tile_kernel(TILE_KERNEL, tile_candidates)
+
 
 def _ssd_chunk_kernel(chunk: int,
                       x_ref, dt_ref, a_ref, b_ref, c_ref,

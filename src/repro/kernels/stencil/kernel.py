@@ -21,12 +21,29 @@ from jax.experimental import pallas as pl
 
 from repro.core.layout import Layout, RecordArray
 from repro.physics import euler
+from repro.tuning.tiles import register_tile_kernel
 
 # dispatch metadata consumed by ops.py and the executor's layout solver:
 # the halo-inclusive tile walk needs per-axis storage, so AoSoA inputs are
 # relayouted at the wrapper boundary (exactly what the solver would emit)
 SUPPORTED_LAYOUTS = (Layout.AOS, Layout.SOA)
 PREFERRED_LAYOUT = Layout.SOA
+TILE_KERNEL = "flux"      # name in the autotuner's tile registry
+DEFAULT_BLOCK = (8, 128)
+
+
+def tile_candidates(shape: tuple[int, ...]) -> tuple[tuple[int, int], ...]:
+    """Feasible ``(bx, by)`` VMEM tile shapes for an interior of
+    ``(nx, ny)`` cells (the autotuner's search axis): VPU-aligned
+    multiples of (8, sublane) × (lane-divisor) that tile the interior
+    exactly — the halo-inclusive load handles the +2 ring."""
+    nx, ny = shape
+    return tuple((bx, by)
+                 for bx in (8, 16, 32, 64) if bx <= nx and nx % bx == 0
+                 for by in (64, 128, 256) if by <= ny and ny % by == 0)
+
+
+register_tile_kernel(TILE_KERNEL, tile_candidates)
 
 
 def _flux_kernel(layout: Layout, bx: int, by: int, u_ref, lam_ref, o_ref):

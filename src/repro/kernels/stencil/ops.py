@@ -16,20 +16,38 @@ import jax
 from repro.core.graph import Graph, concurrent_padded_access
 from repro.core.layout import dispatch_with_relayout
 from repro.core.tensor import DistTensor
-from .kernel import (PREFERRED_LAYOUT, SUPPORTED_LAYOUTS,
-                     flux_difference_pallas)
+from repro.tuning.tiles import resolve_tile
+from .kernel import (DEFAULT_BLOCK, PREFERRED_LAYOUT, SUPPORTED_LAYOUTS,
+                     TILE_KERNEL, flux_difference_pallas)
 from .ref import flux_difference_ref
 
 
 @partial(jax.jit, static_argnames=("block", "use_pallas", "interpret"))
-def flux_difference(state_haloed, lam_x, lam_y, *, block=(8, 128),
-                    use_pallas: bool = True, interpret: bool = True):
+def _flux_difference_jit(state_haloed, lam_x, lam_y, *, block,
+                         use_pallas: bool, interpret: bool):
     if not use_pallas:
         return flux_difference_ref(state_haloed, lam_x, lam_y)
     return dispatch_with_relayout(
         flux_difference_pallas, state_haloed, lam_x, lam_y,
         supported=SUPPORTED_LAYOUTS, preferred=PREFERRED_LAYOUT,
         block=block, interpret=interpret)
+
+
+def flux_difference(state_haloed, lam_x, lam_y, *, block=None,
+                    use_pallas: bool = True, interpret: bool = True):
+    """Sum of FORCE flux differences over both dims of a haloed 2-D
+    Euler record (paper Table 4): ``(nx+2, ny+2)`` space in, ``(nx, ny)``
+    out, layout polymorphic (AoSoA staged through the kernel's preferred
+    per-axis layout).
+
+    ``block=None`` resolves the ``(bx, by)`` VMEM tile through the
+    autotuner's ambient tile scope (``repro.tuning.tiles``); an explicit
+    ``block`` always wins, and outside any scope the kernel default
+    applies."""
+    interior = tuple(s - 2 for s in state_haloed.space)
+    block = resolve_tile(TILE_KERNEL, block, DEFAULT_BLOCK, shape=interior)
+    return _flux_difference_jit(state_haloed, lam_x, lam_y, block=block,
+                                use_pallas=use_pallas, interpret=interpret)
 
 
 def make_flux_difference_graph(
@@ -40,7 +58,7 @@ def make_flux_difference_graph(
     *,
     overlap: bool = True,
     use_pallas: bool = False,
-    block=(8, 128),
+    block=None,
     interpret: bool = True,
     graph: Optional[Graph] = None,
 ) -> Graph:

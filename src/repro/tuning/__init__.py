@@ -1,0 +1,56 @@
+"""repro.tuning — measured autotuner for layout & kernel tiling.
+
+Turns the layout solver's static heuristics and the kernels' fixed tile
+defaults into *measured* decisions (HONEI's per-architecture tuned
+backends, CrystalGPU's transparent execution-parameter selection):
+
+* :mod:`repro.tuning.search` — the search driver: times candidate
+  (layout × tile) configurations as real executions of the plan's
+  region executables and commits the argmin
+  (``Executor(tune="auto")``);
+* :mod:`repro.tuning.cache` — the persistent on-disk cache
+  (``~/.cache/repro-tune`` or ``$REPRO_TUNE_CACHE``), keyed by plan
+  signature × device kind × jax version, so a second process loads
+  tuned configs with zero re-measurement;
+* :mod:`repro.tuning.tiles` — the per-kernel ``tile_candidates()``
+  registry and the ambient tile scope ops wrappers resolve through;
+* :mod:`repro.tuning.timing` — the shared first-call/steady-state
+  timing harness (re-exported by ``benchmarks/common.py``).
+
+This package's ``__init__`` stays import-light (no ``repro.core``
+import): ``core/executor.py`` imports :mod:`tiles` at module load, and
+the search driver is loaded lazily on first attribute access.
+"""
+
+from . import cache, tiles, timing
+from .cache import cache_dir, cache_path, clear_memo
+from .tiles import (active_tiles, record_tile_use, register_tile_kernel,
+                    registered_tile_kernels, resolve_tile, tile_candidates,
+                    tile_scope)
+from .timing import time_fn, time_fn_split
+
+__all__ = [
+    "cache", "tiles", "timing",
+    "cache_dir", "cache_path", "clear_memo",
+    "active_tiles", "record_tile_use", "register_tile_kernel",
+    "registered_tile_kernels", "resolve_tile", "tile_candidates",
+    "tile_scope",
+    "time_fn", "time_fn_split",
+    # lazy (search imports repro.core):
+    "Measurement", "TuningDecision", "STATS", "reset_stats",
+    "resolve_tuning", "measure_plan", "tuning_key", "search",
+]
+
+_LAZY = {"Measurement", "TuningDecision", "STATS", "reset_stats",
+         "resolve_tuning", "measure_plan", "tuning_key", "search"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        search = importlib.import_module(".search", __name__)
+        if name == "search":
+            return search
+        return getattr(search, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,144 @@
+"""Persistent tuning cache — measured decisions survive the process.
+
+One JSON file per tuning key under ``$REPRO_TUNE_CACHE`` (or
+``~/.cache/repro-tune``).  The key is derived from the *heuristic* plan
+signature × device kind × jax version (``repro.tuning.search``), so a
+second process constructing an ``Executor`` over an identical graph on
+the same hardware (the serving pattern) loads the tuned configuration
+with zero re-measurement.
+
+Robustness contract:
+
+* files carry ``schema`` versioning — a version mismatch is treated as
+  a miss (re-measured under ``tune="auto"``), never a crash;
+* a corrupt / truncated / hand-edited-broken file falls back to
+  heuristics with a SINGLE ``RuntimeWarning`` per file per process;
+* writes are atomic (temp file + ``os.replace``) so a concurrent
+  reader never observes a half-written entry;
+* an in-process memo makes repeat loads free (no file IO on the second
+  ``Executor(tune="auto")`` construction in the same process).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import warnings
+from pathlib import Path
+from typing import Any, Optional
+
+__all__ = ["SCHEMA_VERSION", "cache_dir", "cache_path", "load", "store",
+           "clear_memo"]
+
+SCHEMA_VERSION = 1
+
+# in-process memo: key -> validated payload (None entries are not memoized
+# so a file written later in the process is still picked up)
+_MEMO: dict[str, dict] = {}
+# cache files already warned about (the "single warning" contract)
+_WARNED: set[str] = set()
+
+
+def cache_dir() -> Path:
+    """The tuning-cache directory: ``$REPRO_TUNE_CACHE`` if set, else
+    ``~/.cache/repro-tune``."""
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro-tune"
+
+
+def cache_path(key: str) -> Path:
+    """The JSON file holding the tuned decision for ``key``."""
+    return cache_dir() / f"{key}.json"
+
+
+def _validate(payload: Any, key: str) -> dict:
+    """Raise ``ValueError`` unless ``payload`` is a well-formed entry for
+    ``key`` at the current schema version."""
+    if not isinstance(payload, dict):
+        raise ValueError("payload is not an object")
+    if payload.get("schema") != SCHEMA_VERSION:
+        raise ValueError(f"schema {payload.get('schema')!r} != "
+                         f"{SCHEMA_VERSION}")
+    if payload.get("key") != key:
+        raise ValueError("key mismatch")
+    for field in ("layouts", "tiles"):
+        if not isinstance(payload.get(field), dict):
+            raise ValueError(f"missing/invalid {field!r}")
+    if not isinstance(payload.get("measurements", []), list):
+        raise ValueError("invalid measurements")
+    return payload
+
+
+def load(key: str) -> Optional[dict]:
+    """The cached payload for ``key``, or None (miss).
+
+    A corrupt or schema-incompatible file warns ONCE per process and
+    reads as a miss — the caller falls back to heuristics (``load``
+    mode) or re-measures and overwrites (``auto`` mode)."""
+    memo = _MEMO.get(key)
+    if memo is not None:
+        return memo
+    path = cache_path(key)
+    try:
+        text = path.read_text()
+    except FileNotFoundError:
+        return None
+    except OSError as exc:
+        _warn_once(path, f"unreadable ({exc})")
+        return None
+    try:
+        payload = _validate(json.loads(text), key)
+    except (ValueError, TypeError) as exc:
+        _warn_once(path, str(exc))
+        return None
+    _MEMO[key] = payload
+    return payload
+
+
+def _warn_once(path: Path, reason: str) -> None:
+    s = str(path)
+    if s in _WARNED:
+        return
+    _WARNED.add(s)
+    warnings.warn(
+        f"repro-tune cache {s} is corrupt or incompatible ({reason}) — "
+        f"falling back to heuristic layouts/tiles", RuntimeWarning,
+        stacklevel=3)
+
+
+def store(key: str, payload: dict) -> None:
+    """Atomically persist ``payload`` under ``key`` (and memoize it).
+
+    An unwritable cache directory degrades to a warning — tuning still
+    applies in-process, it just will not survive it."""
+    payload = dict(payload, schema=SCHEMA_VERSION, key=key)
+    _MEMO[key] = payload
+    path = cache_path(key)
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(path.parent),
+                                   prefix=f".{key}.", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+    except OSError as exc:
+        warnings.warn(
+            f"repro-tune cache {path} could not be written ({exc}) — "
+            f"tuned configuration applies to this process only",
+            RuntimeWarning, stacklevel=3)
+
+
+def clear_memo() -> None:
+    """Drop the in-process memo and warning dedup (tests)."""
+    _MEMO.clear()
+    _WARNED.clear()

@@ -1,0 +1,309 @@
+"""Measured autotuner for per-segment layout & kernel tiling (HONEI /
+CrystalGPU applied to Ripple's polymorphic layout).
+
+The layout solver (``core/executor.py``) picks AoS/SoA/AoSoA by static
+heuristics and kernels run with fixed default tile shapes — the paper's
+"near-optimal bandwidth across targets" claim, asserted but never
+measured.  This module measures it: for an ``Executor``'s plan it
+
+1. benchmarks the heuristic baseline with real timed executions of the
+   plan's region executables (``timing.time_fn_split`` — the same
+   harness every benchmark table uses), while recording which Pallas
+   kernels the trace consults (``tiles.record_tile_use``);
+2. coordinate-descends over the candidate space: per record state key
+   the halo-feasible layout set the PR-1 solver computes
+   (``core.executor.layout_candidates``), then per consulted kernel its
+   ``tile_candidates()`` hook, accepting a candidate only when its
+   steady-state median beats the incumbent;
+3. commits the argmin configuration (a :class:`TuningDecision`) and
+   persists it in the on-disk cache (``repro.tuning.cache``) keyed by
+   heuristic plan signature × device kind × jax version, so a second
+   process (the serving pattern) loads it with ZERO timed measurements.
+
+``Executor(tune="auto")`` drives this at construction; ``tune="load"``
+only consults the cache (heuristics on a miss);
+``plan.describe_tuning()`` renders what was measured, chosen, and why.
+``STATS["measurements"]`` counts timed candidate executions — tests
+assert it stays 0 on a cache hit.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+from dataclasses import dataclass, field as dfield
+from typing import Any, Optional
+
+from . import cache as cache_lib
+from . import tiles as tiles_lib
+from .timing import time_fn_split
+
+__all__ = ["Measurement", "TuningDecision", "STATS", "reset_stats",
+           "tuning_key", "resolve_tuning", "measure_plan"]
+
+# per-process tuner counters; tests assert measurements == 0 on cache hits
+STATS = {"measurements": 0, "cache_hits": 0, "cache_misses": 0, "stores": 0}
+
+# how many graph steps one timed call executes (relative comparisons only
+# need steady-state per-step cost to dominate fixed dispatch overhead)
+TUNE_STEPS = 2
+TUNE_ITERS = 5
+
+# makes the baseline probe's plan signature unique per tuning session so
+# its trace really runs (and tile-use recording sees every kernel) even
+# when an identical heuristic plan was already compiled in-process
+_probe_nonce = itertools.count(1)
+
+
+def reset_stats() -> None:
+    """Zero the per-process tuner counters (tests)."""
+    for k in STATS:
+        STATS[k] = 0
+
+
+@dataclass(frozen=True)
+class Measurement:
+    """One timed candidate configuration.
+
+    ``kind`` is ``'baseline'`` (the untouched heuristic plan),
+    ``'layout'`` (``key`` = state key, ``candidate`` = layout name) or
+    ``'tile'`` (``key`` = kernel name, ``candidate`` = tile repr);
+    ``chosen`` marks the rows of the committed configuration."""
+
+    kind: str
+    key: str
+    candidate: str
+    first_ms: float
+    steady_ms: float
+    chosen: bool = False
+
+    def describe(self) -> str:
+        what = ("heuristic plan" if self.kind == "baseline"
+                else f"{self.kind} {self.key}={self.candidate}")
+        mark = "  [chosen]" if self.chosen else ""
+        return (f"{what}: steady {self.steady_ms:.4f} ms "
+                f"(first {self.first_ms:.1f} ms){mark}")
+
+
+@dataclass
+class TuningDecision:
+    """The tuner's committed configuration for one plan.
+
+    ``layouts`` maps state keys to the measured-best storage layout
+    (only keys that beat the heuristic appear), ``tiles`` maps kernel
+    names to the measured-best tile config.  ``source`` says where the
+    decision came from: ``'measured'`` (this process timed candidates),
+    ``'cache'`` (loaded from the persistent cache — zero measurements)
+    or ``'heuristic'`` (``tune="load"`` missed the cache; nothing
+    applied).  :meth:`describe` renders the full measurement log —
+    what was measured, what won, and by how much."""
+
+    source: str
+    cache_key: str
+    layouts: dict[str, Any] = dfield(default_factory=dict)   # key -> Layout
+    tiles: dict[str, Any] = dfield(default_factory=dict)     # kernel -> tile
+    baseline_ms: Optional[float] = None
+    tuned_ms: Optional[float] = None
+    measurements: list[Measurement] = dfield(default_factory=list)
+
+    @property
+    def applied(self) -> bool:
+        """True when the decision changes anything vs the heuristics."""
+        return bool(self.layouts or self.tiles)
+
+    def describe(self) -> str:
+        """Human-readable tuning report (``plan.describe_tuning()``)."""
+        lines = [f"tuning ({self.source}, cache key {self.cache_key}):"]
+        if self.baseline_ms is not None and self.tuned_ms is not None:
+            ratio = self.baseline_ms / max(self.tuned_ms, 1e-9)
+            lines[0] += (f" heuristic {self.baseline_ms:.4f} ms -> tuned "
+                         f"{self.tuned_ms:.4f} ms ({ratio:.2f}x)")
+        if not self.applied:
+            lines.append("  heuristic configuration kept (no measured "
+                         "candidate beat it)" if self.source != "heuristic"
+                         else "  heuristic configuration in effect (cache "
+                         "miss under tune=\"load\" — nothing measured)")
+        for name in sorted(self.layouts):
+            lines.append(f"  layout {name} -> "
+                         f"{getattr(self.layouts[name], 'name', self.layouts[name])}")
+        for name in sorted(self.tiles):
+            lines.append(f"  tile {name} -> {self.tiles[name]!r}")
+        if self.measurements:
+            lines.append("  measured:")
+            lines.extend(f"    {m.describe()}" for m in self.measurements)
+        return "\n".join(lines)
+
+
+# -- cache (de)serialization ---------------------------------------------------
+
+def tuning_key(executor) -> str:
+    """The persistent-cache key of an executor's plan: heuristic plan
+    signature × device kind × jax version.  Stable across processes for
+    graphs whose node functions the plan signature can key structurally
+    (plain functions / closures over provable values)."""
+    import jax
+
+    dev = jax.devices()[0]
+    raw = repr(("repro-tune-v1", executor.plan.signature, dev.platform,
+                getattr(dev, "device_kind", ""), jax.__version__))
+    return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+
+def _payload(dec: TuningDecision) -> dict:
+    return {
+        "layouts": {k: v.name for k, v in dec.layouts.items()},
+        "tiles": dict(dec.tiles),
+        "baseline_ms": dec.baseline_ms,
+        "tuned_ms": dec.tuned_ms,
+        "measurements": [
+            {"kind": m.kind, "key": m.key, "candidate": m.candidate,
+             "first_ms": m.first_ms, "steady_ms": m.steady_ms,
+             "chosen": m.chosen} for m in dec.measurements],
+    }
+
+
+def _decision_from_payload(key: str, payload: dict) -> TuningDecision:
+    from ..core.layout import Layout
+
+    layouts = {k: Layout[v] for k, v in payload["layouts"].items()}
+    tiles = {k: tiles_lib._norm(v) for k, v in payload["tiles"].items()}
+    meas = [Measurement(m["kind"], m["key"], m["candidate"],
+                        float(m["first_ms"]), float(m["steady_ms"]),
+                        bool(m.get("chosen", False)))
+            for m in payload.get("measurements", [])]
+    return TuningDecision("cache", key, layouts, tiles,
+                          payload.get("baseline_ms"),
+                          payload.get("tuned_ms"), meas)
+
+
+# -- driver --------------------------------------------------------------------
+
+def resolve_tuning(executor, mode: str) -> TuningDecision:
+    """The tuned decision for ``executor``'s (heuristic) plan.
+
+    ``mode='load'`` never measures: a cache hit applies, a miss keeps
+    heuristics.  ``mode='auto'`` measures on a miss and persists the
+    result.  Called by ``Executor.__init__`` before the plan is
+    finalized."""
+    key = tuning_key(executor)
+    payload = cache_lib.load(key)
+    if payload is not None:
+        try:
+            dec = _decision_from_payload(key, payload)
+        except (KeyError, TypeError, ValueError):
+            cache_lib._warn_once(cache_lib.cache_path(key),
+                                 "undecodable decision")
+            payload = None
+        else:
+            STATS["cache_hits"] += 1
+            return dec
+    STATS["cache_misses"] += 1
+    if mode == "load":
+        return TuningDecision("heuristic", key)
+    dec = measure_plan(executor, key)
+    cache_lib.store(key, _payload(dec))
+    STATS["stores"] += 1
+    return dec
+
+
+def measure_plan(executor, key: str) -> TuningDecision:
+    """Coordinate-descent search over layouts × kernel tiles, every
+    candidate timed as a real execution of the candidate plan's region
+    executables (fresh ``Executor`` per candidate — the executable cache
+    keys tile config and layout plan, so measurements never alias)."""
+    from ..core import executor as executor_lib
+
+    Executor = executor_lib.Executor
+    graph, mesh = executor.graph, executor.mesh
+    nonce = next(_probe_nonce)
+    candidate_sigs: list[tuple] = []
+
+    def bench(layouts, tiles, probe=False):
+        tile_cfg = dict(executor._tile_config)
+        if probe:
+            tile_cfg["__tune_probe__"] = nonce
+        tile_cfg.update(tiles)
+        ex = Executor(graph, mesh=mesh, donate=False,
+                      layout_overrides={**executor._layout_overrides,
+                                        **layouts},
+                      schedule=executor.schedule,
+                      regions=executor.regions_enabled,
+                      tile_overrides=tile_cfg)
+        candidate_sigs.append(ex._plan_sig)
+        state = ex.init_state(**executor._tune_inputs)
+
+        def run_once():
+            return ex.run(dict(state), TUNE_STEPS)
+
+        recorder = tiles_lib.record_tile_use() if probe else None
+        if recorder is not None:
+            with recorder as used:
+                first, steady = time_fn_split(run_once, iters=TUNE_ITERS)
+        else:
+            used = None
+            first, steady = time_fn_split(run_once, iters=TUNE_ITERS)
+        STATS["measurements"] += 1
+        return first, steady, used, ex._plan_sig
+
+    measurements: list[Measurement] = []
+    best_layouts: dict[str, Any] = {}
+    best_tiles: dict[str, Any] = {}
+    best_sig = None
+    try:
+        first, base_ms, used, _sig = bench({}, {}, probe=True)
+        measurements.append(Measurement("baseline", "plan", "heuristic",
+                                        first, base_ms))
+        best_ms = base_ms
+
+        # -- layout axis: halo-feasible set per non-pinned record key ------
+        heuristic = dict(executor.plan.initial)
+        for name, cands in sorted(
+                executor_lib.layout_candidates(executor).items()):
+            for lay in cands:
+                if lay is heuristic.get(name):
+                    continue   # covered by the incumbent measurement
+                f, s, _, sig = bench({**best_layouts, name: lay}, best_tiles)
+                m = Measurement("layout", name, lay.name, f, s)
+                measurements.append(m)
+                if s < best_ms:
+                    best_ms, best_sig = s, sig
+                    best_layouts = {**best_layouts, name: lay}
+
+        # -- tile axis: per consulted kernel, its tile_candidates() hook ---
+        for kernel in sorted(used or {}):
+            uses = used[kernel]
+            defaults = {d for _, d in uses}
+            cand_sets = [set(tiles_lib.tile_candidates(kernel, shape))
+                         for shape, _ in uses]
+            cands = set.intersection(*cand_sets) if cand_sets else set()
+            for tile in sorted(cands, key=repr):
+                if tile in defaults:
+                    continue   # the default is the incumbent
+                f, s, _, sig = bench(best_layouts,
+                                     {**best_tiles, kernel: tile})
+                m = Measurement("tile", kernel, repr(tile), f, s)
+                measurements.append(m)
+                if s < best_ms:
+                    best_ms, best_sig = s, sig
+                    best_tiles = {**best_tiles, kernel: tile}
+    finally:
+        # drop the candidate executables; the winner's is kept only when
+        # the caller's executor will actually reuse it (candidates bench
+        # with donate=False, and donation is part of the plan signature,
+        # so under donate=True the entry could never be fetched again)
+        keep = best_sig if not executor.donate else None
+        for sig in candidate_sigs:
+            if sig != keep:
+                executor_lib._EXECUTABLE_CACHE.pop(sig, None)
+
+    chosen_keys = ({("layout", k, v.name) for k, v in best_layouts.items()}
+                   | {("tile", k, repr(v)) for k, v in best_tiles.items()})
+    if not chosen_keys:
+        chosen_keys = {("baseline", "plan", "heuristic")}
+    measurements = [
+        Measurement(m.kind, m.key, m.candidate, m.first_ms, m.steady_ms,
+                    chosen=(m.kind, m.key, m.candidate) in chosen_keys)
+        for m in measurements]
+    return TuningDecision("measured", key, best_layouts, best_tiles,
+                          baseline_ms=base_ms, tuned_ms=best_ms,
+                          measurements=measurements)

@@ -1,0 +1,46 @@
+"""Shared timing harness — the ONE implementation of first-call vs
+steady-state split timing.
+
+Both the measured autotuner (``repro.tuning.search``) and every
+benchmark table (``benchmarks/common.py`` re-exports these names) time
+through this module, so tuner decisions and benchmark reports are
+measured by the same harness: the first call (which pays trace +
+compile) is reported separately from the steady-state median, and
+per-step numbers never mix in one-off compilation cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["time_fn", "time_fn_split"]
+
+
+def time_fn_split(fn, *args, iters: int = 5, warmup: int = 2,
+                  **kw) -> tuple[float, float]:
+    """``(first_ms, steady_ms)`` — the first call (which pays trace +
+    compile) timed separately from the steady-state median, so tables
+    never mix one-off compilation cost into per-step numbers.
+
+    ``warmup`` counts total pre-measurement calls (the first, timed one
+    included); ``steady_ms`` is the median of ``iters`` calls after it."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args, **kw))
+    first = (time.perf_counter() - t0) * 1e3
+    for _ in range(max(warmup - 1, 0)):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append((time.perf_counter() - t0) * 1e3)
+    times.sort()
+    return first, times[len(times) // 2]
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
+    """Median steady-state wall-time per call in ms (jit-compatible:
+    blocks on result; compilation excluded — see :func:`time_fn_split`)."""
+    return time_fn_split(fn, *args, iters=iters, warmup=warmup, **kw)[1]

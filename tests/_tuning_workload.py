@@ -1,0 +1,21 @@
+"""Shared tuning workload for cross-process cache tests.
+
+The plan signature keys node functions by module/qualname + code, so a
+cached tuning decision only matches across processes when both build the
+graph from the SAME importable definitions — exactly the serving
+pattern.  This module is that shared definition for the tests."""
+
+from repro.core import DistTensor, Graph, Layout, RecordSpec
+
+SPEC = RecordSpec.create("a", "b")
+
+
+def mix(r):
+    return r.set_field("a", r.field("a") * 1.5 + r.field("b"))
+
+
+def make_graph(n: int = 1024, name: str = "px") -> Graph:
+    p = DistTensor(name, (4, n), spec=SPEC, layout=Layout.AOS)
+    g = Graph(name=f"tune_{name}")
+    g.split(mix, p, writes=(0,))
+    return g

@@ -1,0 +1,285 @@
+"""Measured autotuner (repro/tuning + core/executor tune modes):
+candidate enumeration, measurement-driven decisions, the persistent
+cache (hit = zero timed measurements, corrupt file = heuristics + one
+warning, cross-process load), and value equality of tuned plans."""
+
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DistTensor, Executor, Graph, Layout, RecordSpec,
+                        layout_candidates, storage_candidates)
+from repro.tuning import cache as tune_cache
+from repro.tuning import search as tune_search
+from repro.tuning import tiles as tune_tiles
+
+SPEC = RecordSpec.create("a", "b")
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Every test gets its own on-disk cache dir and fresh counters."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune-cache"))
+    tune_cache.clear_memo()
+    tune_search.reset_stats()
+    yield
+    tune_cache.clear_memo()
+
+
+def _mix(r):
+    return r.set_field("a", r.field("a") * 1.5 + r.field("b"))
+
+
+def _record_graph(n=2048, name="p"):
+    p = DistTensor(name, (4, n), spec=SPEC, layout=Layout.AOS)
+    g = Graph(name=f"tune_{name}")
+    g.split(_mix, p, writes=(0,))
+    return g, p
+
+
+def _kernel_graph(n=4096):
+    from repro.kernels.saxpy.kernel import SAXPY_SPEC
+    from repro.kernels.saxpy.ops import saxpy_record
+
+    r = DistTensor("r", (n,), spec=SAXPY_SPEC, layout=Layout.AOS)
+    g = Graph(name="tune_saxpy")
+    g.split(lambda rec: saxpy_record(rec, 2.0), r, writes=(0,))
+    return g, r
+
+
+# -- candidate enumeration -----------------------------------------------------
+
+def test_storage_candidates_halo_partition_clamp():
+    assert storage_candidates((4, 256)) == (
+        Layout.AOS, Layout.SOA, Layout.AOSOA)
+    assert storage_candidates((4, 256), halo=(1, 0)) == (
+        Layout.AOS, Layout.SOA, Layout.AOSOA)
+    assert storage_candidates((4, 256), halo=(0, 1)) == (
+        Layout.AOS, Layout.SOA)
+    assert storage_candidates((4, 256), partition=(None, "x")) == (
+        Layout.AOS, Layout.SOA)
+
+
+def test_layout_candidates_respect_pins_and_halo():
+    g, _ = _record_graph()
+    assert layout_candidates(Executor(g)) == {
+        "p": (Layout.AOS, Layout.SOA, Layout.AOSOA)}
+
+    pinned = DistTensor("q", (4, 256), spec=SPEC, layout=Layout.AOS,
+                        pin_layout=True)
+    g2 = Graph()
+    g2.split(_mix, pinned, writes=(0,))
+    assert layout_candidates(Executor(g2)) == {}
+
+    haloed = DistTensor("h", (64,), spec=SPEC, layout=Layout.SOA,
+                        halo=(1,))
+    g3 = Graph()
+    g3.split(lambda r: r, haloed, writes=(0,))
+    assert layout_candidates(Executor(g3)) == {
+        "h": (Layout.AOS, Layout.SOA)}
+
+
+def test_tile_registry_has_every_kernel():
+    import repro.kernels.attention.kernel   # noqa: F401
+    import repro.kernels.eikonal.kernel     # noqa: F401
+    import repro.kernels.particle.kernel    # noqa: F401
+    import repro.kernels.saxpy.kernel       # noqa: F401
+    import repro.kernels.ssd.kernel         # noqa: F401
+    import repro.kernels.stencil.kernel     # noqa: F401
+
+    names = set(tune_tiles.registered_tile_kernels())
+    assert {"saxpy", "particle", "flux", "eikonal", "attention",
+            "ssd"} <= names
+    assert tune_tiles.tile_candidates("saxpy", (4096,)) == (
+        256, 512, 1024, 2048, 4096)
+    assert (8, 128) in tune_tiles.tile_candidates("flux", (64, 128))
+    # infeasible shapes yield no candidates rather than bad tiles
+    assert tune_tiles.tile_candidates("saxpy", (100,)) == ()
+
+
+def test_tile_scope_resolution_precedence():
+    assert tune_tiles.resolve_tile("saxpy", None, 1024) == 1024
+    with tune_tiles.tile_scope({"saxpy": 2048}):
+        assert tune_tiles.resolve_tile("saxpy", None, 1024) == 2048
+        assert tune_tiles.resolve_tile("saxpy", 512, 1024) == 512  # explicit
+        with tune_tiles.tile_scope({"saxpy": 256}):
+            assert tune_tiles.resolve_tile("saxpy", None, 1024) == 256
+    assert tune_tiles.resolve_tile("saxpy", None, 1024) == 1024
+
+
+# -- measurement + decision ----------------------------------------------------
+
+def test_auto_measures_commits_and_matches_heuristic_values():
+    g, p = _record_graph()
+    ex = Executor(g, donate=False, tune="auto")
+    dec = ex.plan.tuning
+    assert dec is not None and dec.source == "measured"
+    assert dec.baseline_ms is not None and dec.tuned_ms is not None
+    assert dec.tuned_ms <= dec.baseline_ms + 1e-9
+    assert tune_search.STATS["measurements"] >= 3  # baseline + 2 layouts
+    # the decision is rendered, with the chosen rows marked
+    txt = ex.plan.describe_tuning()
+    assert "measured" in txt and "heuristic" in txt
+    assert ex.plan.describe().endswith(txt)
+
+    base = Executor(g, donate=False)
+    s0 = base.run(base.init_state(), 3)
+    s1 = ex.run(ex.init_state(), 3)
+    np.testing.assert_allclose(
+        np.asarray(base.read(s0, p).field("a")),
+        np.asarray(ex.read(s1, p).field("a")), rtol=1e-6)
+
+
+def test_tuned_kernel_tiles_apply_and_preserve_values():
+    g, r = _kernel_graph()
+    ex = Executor(g, donate=False, tune="auto")
+    dec = ex.plan.tuning
+    # the saxpy kernel was consulted during the probe, so the tile axis
+    # was searched (whether or not a non-default tile won)
+    assert any(m.kind == "tile" and m.key == "saxpy"
+               for m in dec.measurements)
+    base = Executor(g, donate=False)
+    s0 = base.run(base.init_state(), 2)
+    s1 = ex.run(ex.init_state(), 2)
+    np.testing.assert_allclose(
+        np.asarray(base.read(s0, r).field("y")),
+        np.asarray(ex.read(s1, r).field("y")), rtol=1e-5)
+
+
+def test_load_mode_without_cache_keeps_heuristics_and_never_measures():
+    g, _ = _record_graph(name="pl")
+    ex = Executor(g, tune="load")
+    assert tune_search.STATS["measurements"] == 0
+    dec = ex.plan.tuning
+    assert dec.source == "heuristic" and not dec.applied
+    assert "heuristic configuration in effect" in ex.plan.describe_tuning()
+    # plan identical to tune="off"
+    assert ex.plan.per_segment == Executor(g).plan.per_segment
+
+
+def test_invalid_tune_mode_rejected():
+    g, _ = _record_graph(name="pv")
+    with pytest.raises(ValueError, match="tune must be"):
+        Executor(g, tune="always")
+
+
+# -- cache persistence ---------------------------------------------------------
+
+def test_cache_hit_performs_zero_timed_measurements():
+    g, _ = _record_graph(name="pc")
+    Executor(g, donate=False, tune="auto")
+    measured = tune_search.STATS["measurements"]
+    assert measured > 0
+
+    ex2 = Executor(g, donate=False, tune="auto")
+    assert tune_search.STATS["measurements"] == measured  # ZERO new
+    assert ex2.plan.tuning.source == "cache"
+
+    # drop the in-process memo: the decision still loads from DISK with
+    # zero measurements (the cross-process path, same process)
+    tune_cache.clear_memo()
+    ex3 = Executor(g, donate=False, tune="auto")
+    assert tune_search.STATS["measurements"] == measured
+    assert ex3.plan.tuning.source == "cache"
+    assert ex3.plan.tuning.measurements  # report survives the round-trip
+    # and the applied plans agree
+    assert ex3.plan.per_segment == ex2.plan.per_segment
+
+
+def test_corrupt_cache_falls_back_to_heuristics_with_single_warning():
+    g, _ = _record_graph(name="pk")
+    probe = Executor(g)   # same heuristic plan -> same tuning key
+    key = tune_search.tuning_key(probe)
+    path = tune_cache.cache_path(key)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text("{ this is not json")
+
+    with pytest.warns(RuntimeWarning, match="corrupt or incompatible"):
+        ex = Executor(g, tune="load")
+    assert not ex.plan.tuning.applied       # heuristics in effect
+    assert ex.plan.per_segment == probe.plan.per_segment
+
+    # second construction: the warning does NOT repeat
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ex2 = Executor(g, tune="load")
+    assert not ex2.plan.tuning.applied
+    assert tune_search.STATS["measurements"] == 0
+
+
+def test_schema_mismatch_is_a_miss_and_auto_remeasures():
+    g, _ = _record_graph(name="ps")
+    # donate is part of the plan signature, hence of the tuning key —
+    # the probe must match the tuned executor's construction
+    probe = Executor(g, donate=False)
+    key = tune_search.tuning_key(probe)
+    path = tune_cache.cache_path(key)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps({"schema": 999, "key": key,
+                                "layouts": {}, "tiles": {}}))
+    with pytest.warns(RuntimeWarning, match="schema"):
+        ex = Executor(g, donate=False, tune="auto")
+    assert ex.plan.tuning.source == "measured"
+    assert tune_search.STATS["measurements"] > 0
+    # the re-measured decision overwrote the bad file
+    assert json.loads(path.read_text())["schema"] == \
+        tune_cache.SCHEMA_VERSION
+
+
+def test_cache_written_by_one_process_loads_in_subprocess(tmp_path):
+    """The serving pattern across processes: this process tunes and
+    persists; a fresh interpreter constructs the same graph with
+    tune="auto" and must apply the cached decision with ZERO timed
+    measurements."""
+    from _tuning_workload import make_graph
+
+    cache_dir = os.environ["REPRO_TUNE_CACHE"]
+    g = make_graph()
+    ex = Executor(g, donate=False, tune="auto")
+    assert tune_search.STATS["measurements"] > 0
+    assert ex.plan.tuning.source == "measured"
+    files = os.listdir(cache_dir)
+    assert len(files) == 1
+
+    # the graph must come from the same importable module in both
+    # processes — the plan signature keys node fns by module/qualname
+    code = """
+from _tuning_workload import make_graph
+from repro.core import Executor
+from repro.tuning import search as tune_search
+
+ex = Executor(make_graph(), donate=False, tune="auto")
+assert ex.plan.tuning.source == "cache", ex.plan.tuning.source
+assert tune_search.STATS["measurements"] == 0, tune_search.STATS
+assert tune_search.STATS["cache_hits"] == 1, tune_search.STATS
+print("SUBPROCESS-LAYOUTS:",
+      sorted((k, v.name) for k, v in ex.plan.tuning.layouts.items()))
+print("SUBPROCESS-OK")
+"""
+    env = dict(os.environ)
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(here), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here, env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"
+    assert "SUBPROCESS-OK" in out.stdout
+    # the subprocess applied the SAME decision this process measured
+    want = sorted((k, v.name) for k, v in ex.plan.tuning.layouts.items())
+    assert f"SUBPROCESS-LAYOUTS: {want}" in out.stdout
+
+
+def test_atomic_store_and_memo_roundtrip():
+    tune_cache.store("k1", {"layouts": {}, "tiles": {},
+                            "measurements": []})
+    assert tune_cache.load("k1")["schema"] == tune_cache.SCHEMA_VERSION
+    tune_cache.clear_memo()
+    loaded = tune_cache.load("k1")
+    assert loaded is not None and loaded["key"] == "k1"

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs CI job.
+
+    python tools/check_md_links.py README.md docs
+
+Checks every relative ``[text](target)`` link in the given markdown
+files (directories are scanned for ``*.md``) and fails when a target
+does not resolve on disk.  External links (``http(s)://``, ``mailto:``)
+and pure-anchor links (``#...``) are skipped; a ``path#anchor`` link is
+checked for the path only."""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excludes images' leading ! only for clarity; image
+# targets are checked the same way
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files(args: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        else:
+            out.append(p)
+    return out
+
+
+def check(files: list[Path]) -> list[str]:
+    errors: list[str] = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        for n, line in enumerate(f.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:          # pure in-page anchor
+                    continue
+                if not (f.parent / path).exists():
+                    errors.append(f"{f}:{n}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = md_files(argv or ["README.md", "docs"])
+    errors = check(files)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_md_links] {len(files)} files, "
+          f"{len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -22,14 +22,18 @@ def main(argv=None) -> int:
                     help="write per-suite timings/rows as JSON")
     args = ap.parse_args(argv)
 
-    from . import (dispatch_overhead, fig13_scaling, table2_saxpy,
-                   table3_particle, table4_flux, table5_eikonal,
-                   table_layout, table_tuned)
+    from . import (dispatch_overhead, fig13_scaling, serve_load,
+                   table2_saxpy, table3_particle, table4_flux,
+                   table5_eikonal, table_layout, table_tuned)
     jobs = [
         ("Dispatch overhead (region compiler vs per-segment)",
          lambda: dispatch_overhead.main(
              steps=30 if not args.full else 100,
              n=4096 if not args.full else 1 << 20)),
+        ("Serving load (continuous batching)",
+         lambda: serve_load.main(
+             slots=2, n_requests=6, prompt_len=10, gen=8,
+             tuned=args.full)),
         ("Tuned vs heuristic (measured autotuner)", table_tuned.main),
         ("Layout table (AoS/SoA/AoSoA)", lambda: table_layout.main(
             saxpy_n=1 << 18 if not args.full else 1 << 22,

@@ -1,0 +1,182 @@
+"""Serving load benchmark: continuous batching on the Ripple executor.
+
+A synthetic many-user load (more requests than decode slots, ragged
+prompt lengths) streams through ``runtime.Batcher`` and reports the
+serving numbers the paper's executor story promises:
+
+* ``req_per_s`` / ``tok_per_s`` — end-to-end throughput over the wall
+  clock of the whole drain (prefills, admissions and decode steps);
+* ``p50_tok_ms`` / ``p99_tok_ms`` — per-token latency percentiles over
+  every generated token (a token's latency is the gap to the previous
+  token of the same request; the first token's is measured from
+  ``submit``, so queueing shows up in the tail);
+* ``achieved_gbps`` — achieved bandwidth of the steady decode step from
+  known bytes-moved (read every parameter once, read+write every state
+  tensor — the cache-bound decode roofline estimate) over the measured
+  mean step time;
+* trace discipline — the steady decode loop traces ONCE per plan, and a
+  freshly constructed worker ``Batcher`` (same cfg/params objects)
+  serves with ZERO new traces straight from the process-wide executable
+  cache.  Both are hard-asserted; this is the CI serve-smoke gate.
+
+Two variants per run: ``heuristic`` (the layout solver's static picks)
+and ``tuned`` (``Executor(tune="auto")`` — the measured autotuner,
+which after the PR-6 donation fix benches candidates under the decode
+plan's real donating executables).
+
+  PYTHONPATH=src python -m benchmarks.serve_load --json BENCH_6.json
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models.lm import init_lm
+
+from .common import Csv, gbps
+
+# ragged prompt lengths cycle over a few values so the prefill-graph
+# cache stays small (one trace per distinct length)
+PROMPT_FRACS = (0.5, 0.75, 1.0)
+
+
+def _known_bytes_per_step(params, state) -> int:
+    """Known bytes-moved by one decode step: every parameter is read
+    once, every state tensor (KV caches dominate) is read and written."""
+    p = sum(x.nbytes for x in jax.tree_util.tree_leaves(params))
+    s = sum(v.nbytes for v in state.values())
+    return p + 2 * s
+
+
+def _submit_load(batcher, cfg, rng, n_requests, prompt_len, gen):
+    reqs = []
+    for i in range(n_requests):
+        L = max(1, int(prompt_len * PROMPT_FRACS[i % len(PROMPT_FRACS)]))
+        prompt = rng.integers(1, cfg.vocab_size, (L,)).astype(np.int32)
+        reqs.append(batcher.submit(prompt, max_new_tokens=gen))
+    return reqs
+
+
+def _token_latencies_ms(reqs) -> np.ndarray:
+    lat = []
+    for r in reqs:
+        if not r.token_times:
+            continue
+        lat.append(r.token_times[0] - r.t_submit)
+        lat.extend(np.diff(r.token_times))
+    return np.asarray(lat) * 1e3
+
+
+def bench_variant(cfg, params, *, variant, tune, slots, n_requests,
+                  prompt_len, gen, seed=0) -> dict:
+    from repro.runtime.batcher import Batcher
+
+    opts = {"tune": tune}
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    batcher = Batcher(cfg, params, batch=slots, max_seq=prompt_len + gen,
+                      executor_opts=opts)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    reqs = _submit_load(batcher, cfg, rng, n_requests, prompt_len, gen)
+    batcher.run()
+    wall = time.perf_counter() - t0
+
+    lat = _token_latencies_ms(reqs)
+    n_tok = int(sum(len(r.generated) for r in reqs))
+    stats = batcher.cache_stats()["decode"]
+    nbytes = _known_bytes_per_step(params, batcher.state)
+    step_ms = batcher.stats.mean * 1e3
+
+    # a fresh worker (same cfg/params objects => same plan signature)
+    # must serve the same load with ZERO new traces
+    before = stats["trace_events"]
+    worker = Batcher(cfg, params, batch=slots, max_seq=prompt_len + gen,
+                     executor_opts=opts)
+    wreqs = _submit_load(worker, cfg, np.random.default_rng(seed),
+                         n_requests, prompt_len, gen)
+    worker.run()
+    fresh_new = worker.executor.cache_stats()["trace_events"] - before
+    assert worker.executor.plan.signature == batcher.executor.plan.signature
+    assert [r.generated for r in wreqs] == [r.generated for r in reqs], \
+        "fresh worker generated different tokens"
+
+    return dict(
+        variant=variant, slots=slots, requests=n_requests,
+        prompt_len=prompt_len, gen=gen,
+        build_s=build_s, wall_s=wall,
+        req_per_s=n_requests / max(wall, 1e-9),
+        tok_per_s=n_tok / max(wall, 1e-9),
+        p50_tok_ms=float(np.percentile(lat, 50)),
+        p99_tok_ms=float(np.percentile(lat, 99)),
+        step_ms=step_ms,
+        known_bytes_per_step=nbytes,
+        achieved_gbps=gbps(nbytes, step_ms),
+        decode_steps=batcher.steps,
+        decode_traces=stats["trace_events"],
+        fresh_worker_new_traces=int(fresh_new),
+    )
+
+
+def main(arch="qwen3_8b", slots=3, n_requests=8, prompt_len=12, gen=12,
+         tuned=True, json_path=None) -> list[dict]:
+    cfg = configs.get_smoke(arch)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0), tp=1)
+
+    csv = Csv("variant", "slots", "requests", "wall_s", "req_per_s",
+              "tok_per_s", "p50_tok_ms", "p99_tok_ms", "step_ms",
+              "achieved_gbps", "decode_traces", "fresh_new_traces")
+    variants = [("heuristic", "off")] + ([("tuned", "auto")] if tuned
+                                         else [])
+    rows = []
+    for variant, tune in variants:
+        r = bench_variant(cfg, params, variant=variant, tune=tune,
+                          slots=slots, n_requests=n_requests,
+                          prompt_len=prompt_len, gen=gen)
+        rows.append(r)
+        csv.row(r["variant"], r["slots"], r["requests"], r["wall_s"],
+                r["req_per_s"], r["tok_per_s"], r["p50_tok_ms"],
+                r["p99_tok_ms"], r["step_ms"], r["achieved_gbps"],
+                r["decode_traces"], r["fresh_worker_new_traces"])
+
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"arch": arch, "slots": slots,
+                       "requests": n_requests, "prompt_len": prompt_len,
+                       "gen": gen, "rows": rows,
+                       "unix_time": time.time()}, fh, indent=2)
+        print(f"[serve_load] wrote {json_path}")
+
+    # hard gates (CI serve-smoke): the steady decode loop traced once for
+    # the first (heuristic) plan, and every fresh worker re-served its
+    # load from the executable cache with zero new traces
+    assert rows[0]["decode_traces"] == 1, rows[0]
+    bad = [r for r in rows if r["fresh_worker_new_traces"] != 0]
+    assert not bad, f"fresh worker retraced: {bad}"
+    return csv.dicts()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--arch", default="qwen3_8b")
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--no-tuned", action="store_true",
+                    help="skip the tune=\"auto\" variant")
+    args = ap.parse_args()
+    try:
+        main(arch=args.arch, slots=args.slots, n_requests=args.requests,
+             prompt_len=args.prompt_len, gen=args.gen,
+             tuned=not args.no_tuned, json_path=args.json)
+    except AssertionError as exc:
+        print(f"[serve_load] FAILED: {exc}", file=sys.stderr)
+        sys.exit(1)

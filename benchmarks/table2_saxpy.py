@@ -10,12 +10,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.saxpy.ops import saxpy
-from .common import Csv, time_fn, time_fn_split
+from .common import Csv, gbps, time_fn, time_fn_split
 
 
 def main(sizes=(1 << 20, 4 << 20, 16 << 20)) -> list[dict]:
     csv = Csv("size", "first_call_ms", "ref_ms", "pallas_checked_ms",
-              "pallas_nbc_ms", "check_overhead_pct")
+              "pallas_nbc_ms", "check_overhead_pct", "ref_gbps", "nbc_gbps")
     rng = np.random.default_rng(0)
     for n in sizes:
         x = jnp.asarray(rng.standard_normal(n, dtype=np.float32))
@@ -24,7 +24,10 @@ def main(sizes=(1 << 20, 4 << 20, 16 << 20)) -> list[dict]:
         first, t_chk = time_fn_split(saxpy, 2.0, x, y, bounds_check=True)
         t_nbc = time_fn(saxpy, 2.0, x, y, bounds_check=False)
         over = (t_chk - t_nbc) / max(t_nbc, 1e-9) * 100
-        csv.row(n, first, t_ref, t_chk, t_nbc, over)
+        # known bytes per pass: read x, read y, write out — 3 f32 streams
+        nbytes = 3 * n * 4
+        csv.row(n, first, t_ref, t_chk, t_nbc, over,
+                gbps(nbytes, t_ref), gbps(nbytes, t_nbc))
     return csv.dicts()
 
 

@@ -13,12 +13,12 @@ import numpy as np
 from repro.analysis import analyze_hlo
 from repro.core import Layout, RecordArray
 from repro.kernels.particle.ops import PARTICLE_SPEC, particle_update
-from .common import Csv, time_fn_split
+from .common import Csv, gbps, time_fn_split
 
 
 def main(sizes=(100_000, 1_000_000)) -> list[dict]:
     csv = Csv("size", "layout", "first_call_ms", "cpu_ms", "hlo_bytes",
-              "hlo_flops")
+              "hlo_flops", "achieved_gbps")
     rng = np.random.default_rng(0)
     for n in sizes:
         fields = {"x": jnp.asarray(rng.standard_normal((n, 3),
@@ -33,7 +33,7 @@ def main(sizes=(100_000, 1_000_000)) -> list[dict]:
             ).lower(rec).compile()
             a = analyze_hlo(comp.as_text())
             csv.row(n, layout.name, first, t, int(a["bytes"]),
-                    int(a["flops"]))
+                    int(a["flops"]), gbps(a["bytes"], t))
     return csv.dicts()
 
 

@@ -11,7 +11,7 @@ from repro.analysis import analyze_hlo
 from repro.core import Boundary, Layout, RecordArray, pad_boundary_only
 from repro.kernels.stencil.ops import flux_difference
 from repro.physics.euler import EULER_SPEC, shock_bubble_init
-from .common import Csv, time_fn_split
+from .common import Csv, gbps, time_fn_split
 
 
 def _haloed(nx, ny, layout):
@@ -26,7 +26,8 @@ def _haloed(nx, ny, layout):
 
 def main(sizes=((256, 256), (512, 512))) -> list[dict]:
     csv = Csv("size", "layout", "pallas_first_ms", "pallas_cpu_ms",
-              "jnp_first_ms", "jnp_cpu_ms", "hlo_bytes", "hlo_flops")
+              "jnp_first_ms", "jnp_cpu_ms", "hlo_bytes", "hlo_flops",
+              "jnp_gbps", "pallas_gbps")
     for nx, ny in sizes:
         for layout in (Layout.SOA,):
             hal = _haloed(nx, ny, layout)
@@ -38,7 +39,8 @@ def main(sizes=((256, 256), (512, 512))) -> list[dict]:
             ).lower(hal).compile()
             a = analyze_hlo(comp.as_text())
             csv.row(f"{nx}x{ny}", layout.name, fp, tp, fj, tj,
-                    int(a["bytes"]), int(a["flops"]))
+                    int(a["bytes"]), int(a["flops"]),
+                    gbps(a["bytes"], tj), gbps(a["bytes"], tp))
     return csv.dicts()
 
 

@@ -10,21 +10,24 @@ import numpy as np
 
 from repro.core import pad_boundary_only
 from repro.kernels.eikonal.ops import eikonal_fim_sweep
-from .common import Csv, time_fn_split
+from .common import Csv, gbps, time_fn_split
 
 
 def main(sizes=(256, 512), inners=(2, 4, 8)) -> list[dict]:
-    csv = Csv("size", "inner_sweeps", "first_call_ms", "cpu_ms")
+    csv = Csv("size", "inner_sweeps", "first_call_ms", "cpu_ms",
+              "achieved_gbps")
     for n in sizes:
         phi = jnp.full((n, n), 1e3, jnp.float32)
         src = jnp.zeros((n, n), bool).at[n // 2, n // 2].set(True)
         phi = jnp.where(src, 0.0, phi)
         ph = pad_boundary_only(pad_boundary_only(phi, axis=0, width=1),
                                axis=1, width=1)
+        # known bytes per sweep: read+write padded phi, read the source mask
+        nbytes = 2 * ph.nbytes + src.nbytes
         for inner in inners:
             first, t = time_fn_split(eikonal_fim_sweep, ph, src, 1.0 / n,
                                      inner=inner, iters=3)
-            csv.row(n, inner, first, t)
+            csv.row(n, inner, first, t, gbps(nbytes, t))
     return csv.dicts()
 
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Boundary, Layout, RecordArray, pad_boundary_only, relayout
-from .common import Csv, time_fn, time_fn_split
+from .common import Csv, gbps, time_fn, time_fn_split
 
 LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
 
@@ -37,16 +37,19 @@ def _bench_kernel(csv, kernel_name, n_label, make_rec, run):
                                        rtol=1e-4, atol=1e-5,
                                        err_msg=f"{lay}:{name}")
     t_relayout = time_fn(lambda r: relayout(r, Layout.AOS).data, base)
+    # known bytes per invocation: read + write the whole record storage
+    nbytes = 2 * base.data.nbytes
     csv.row(kernel_name, n_label,
             firsts[Layout.AOS], firsts[Layout.SOA], firsts[Layout.AOSOA],
             times[Layout.AOS], times[Layout.SOA], times[Layout.AOSOA],
-            times[Layout.AOS] / max(times[Layout.SOA], 1e-9), t_relayout)
+            times[Layout.AOS] / max(times[Layout.SOA], 1e-9), t_relayout,
+            gbps(nbytes, min(times.values())))
 
 
 def main(saxpy_n=1 << 18, particle_n=65_536, flux_shape=(128, 128)) -> list[dict]:
     csv = Csv("kernel", "size", "aos_first_ms", "soa_first_ms",
               "aosoa_first_ms", "aos_ms", "soa_ms", "aosoa_ms",
-              "aos_over_soa", "relayout_ms")
+              "aos_over_soa", "relayout_ms", "best_gbps")
     rng = np.random.default_rng(0)
 
     # -- saxpy (record form) -------------------------------------------------

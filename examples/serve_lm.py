@@ -1,8 +1,12 @@
-"""Batched LM serving demo: prefill + greedy decode with ragged request
-lengths (per-request stop), built from the graph-scheduling philosophy of
-the paper: prefill and decode are two phases of one program, the KV cache
-is the polymorphic-layout record (C1), and per-request completion is the
-conditional-execution pattern (paper §5.3.6).
+"""Continuous-batching LM serving demo on the Ripple executor.
+
+Requests with ragged prompt lengths and per-request EOS stream through
+``runtime.Batcher``: prefill and batched greedy decode are Ripple graphs
+(one node per layer), the KV cache is a layout-polymorphic RecordArray
+state tensor whose storage the layout solver picks, and retired slots are
+immediately re-filled from the queue — more requests than batch slots is
+the normal case, not an error.  Encoder-decoder / VLM archs fall back to
+the legacy jit loop (see repro/launch/serve.py).
 
   PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b --smoke
 """
@@ -16,80 +20,60 @@ sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.models.blocks import ShardCtx
-from repro.models.lm import decode_step, init_lm, prefill
+from repro.models.lm import init_lm
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode batch slots (requests = 2x this)")
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-gen", type=int, default=24)
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)
-    ctx = ShardCtx()
     params, _ = init_lm(cfg, jax.random.PRNGKey(0), tp=1)
+    if cfg.is_encdec or cfg.frontend_dim:
+        print(f"[serve_lm] {cfg.name} is encoder-decoder/VLM; use "
+              f"`python -m repro.launch.serve --legacy` for this arch")
+        return
+
+    from repro.runtime import Batcher
+
     rng = np.random.default_rng(0)
-    B = args.batch
     eos = 0  # token 0 acts as EOS for the demo
+    n_req = 2 * args.batch
+    max_seq = args.prompt_len + args.max_gen
 
-    batch = {"tokens": jnp.asarray(rng.integers(
-        1, cfg.vocab_size, (B, args.prompt_len)).astype(np.int32))}
-    kw = {}
-    if cfg.is_encdec:
-        batch["frames"] = jnp.asarray(rng.standard_normal(
-            (B, 16, cfg.frontend_dim)).astype(np.float32))
-        kw["enc_len"] = 16
-    elif cfg.frontend_dim:
-        batch["patches"] = jnp.asarray(rng.standard_normal(
-            (B, cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32))
-
-    extra = cfg.frontend_tokens if (cfg.frontend_dim
-                                    and not cfg.is_encdec) else 0
-    max_seq = args.prompt_len + args.max_gen + extra
-
+    batcher = Batcher(cfg, params, batch=args.batch, max_seq=max_seq,
+                      eos_token=eos)
     t0 = time.perf_counter()
-    logits, caches = jax.jit(
-        lambda p, b: prefill(p, b, cfg, ctx, max_seq=max_seq))(params, batch)
-    t_prefill = time.perf_counter() - t0
+    reqs = []
+    for i in range(n_req):
+        # ragged prompts: lengths vary per request
+        L = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+        prompt = rng.integers(1, cfg.vocab_size, (L,)).astype(np.int32)
+        reqs.append(batcher.submit(prompt, max_new_tokens=args.max_gen))
+    batcher.run()
+    dt = time.perf_counter() - t0
 
-    @jax.jit
-    def step(params, caches, toks, done):
-        logits, caches = decode_step(params, caches, toks, cfg, ctx, **kw)
-        nxt = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)
-        nxt = jnp.where(done, eos, nxt).astype(jnp.int32)
-        done = done | (nxt == eos)
-        return caches, nxt, done
-
-    toks = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
-    done = toks == eos
-    rows = [np.asarray(toks)]
-    t1 = time.perf_counter()
-    n_steps = 0
-    for _ in range(args.max_gen - 1):
-        caches, toks, done = step(params, caches, toks, done)
-        rows.append(np.asarray(toks))
-        n_steps += 1
-        if bool(done.all()):  # conditional stop (paper §5.3.6, host side)
-            break
-    t_dec = time.perf_counter() - t1
-
-    gen = np.stack(rows, axis=1)
-    lens = (gen != eos).sum(axis=1)
-    print(f"[serve_lm] arch={cfg.name} batch={B} "
-          f"prompt={args.prompt_len} max_gen={args.max_gen}")
-    print(f"[serve_lm] prefill {t_prefill*1e3:.0f} ms; "
-          f"{t_dec / max(n_steps, 1) * 1e3:.1f} ms/decode-step; "
-          f"request lengths {lens.tolist()}")
-    for b in range(min(B, 3)):
-        print(f"  req{b}: {gen[b][:lens[b]].tolist()[:12]}...")
+    n_tok = sum(len(r.generated) for r in reqs)
+    lens = [len(r.generated) for r in reqs]
+    stats = batcher.cache_stats()["decode"]
+    print(f"[serve_lm] arch={cfg.name} slots={args.batch} "
+          f"requests={n_req} max_gen={args.max_gen}")
+    print(f"[serve_lm] {batcher.steps} decode steps, {n_tok} tokens in "
+          f"{dt*1e3:.0f} ms ({n_tok/max(dt,1e-9):.1f} tok/s); "
+          f"decode traces={stats['trace_events']}; "
+          f"request lengths {lens}")
+    for r in reqs[:3]:
+        print(f"  req{r.rid} (prompt {len(r.prompt)}): "
+              f"{r.generated[:12]}{'...' if len(r.generated) > 12 else ''}")
 
 
 if __name__ == "__main__":

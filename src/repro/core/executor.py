@@ -303,6 +303,35 @@ class LayoutPlan:
         return f"{self.describe_dag()}\n{self.describe_tuning()}"
 
 
+_NATIVE_COMBINE = {"add": lax.psum, "max": lax.pmax, "min": lax.pmin}
+
+_FOLD_COMBINE = {
+    "mul": jnp.multiply,
+    "and": jnp.bitwise_and,
+    "or": jnp.bitwise_or,
+    "xor": jnp.bitwise_xor,
+    "minimum": jnp.minimum,   # NaN-propagating elementwise per IEEE/jnp
+    "maximum": jnp.maximum,
+}
+
+
+def _combine_over_axes(local, axes, combine: str):
+    """Cross-shard combine for a reduction result.
+
+    ``add``/``max``/``min`` ride the native psum/pmax/pmin collectives.
+    The remaining Ripple combiners (mul, bitwise and/or/xor, NaN-propagating
+    minimum/maximum) have no lax primitive, so the per-shard scalars are
+    all-gathered (tiny: one scalar per mesh shard) and folded locally —
+    every shard computes the identical fold, keeping the result replicated
+    exactly like the psum path."""
+    if combine in _NATIVE_COMBINE:
+        return _NATIVE_COMBINE[combine](local, axes)
+    op = _FOLD_COMBINE[combine]
+    gathered = lax.all_gather(local, axes)  # (n_shards, *local.shape)
+    return functools.reduce(op, [gathered[i]
+                                 for i in range(gathered.shape[0])])
+
+
 def _segment_nodes(kind: str, payload):
     """All nodes a segment executes (loop bodies recursively)."""
     if kind == "device":
@@ -1322,9 +1351,8 @@ class Executor:
             axes = tuple({ax for ax in t.partition if ax is not None
                           and self.mesh.shape[ax] > 1})
             if axes:
-                op = {"add": lax.psum, "max": lax.pmax, "min": lax.pmin}[
-                    node.reducer.combine]
-                local = op(local, axes)
+                local = _combine_over_axes(local, axes,
+                                           node.reducer.combine)
         state[node.result.name] = jnp.asarray(local, dtype=node.result.dtype)
 
     def _lower_levels(self, levels, state: dict, sharded: bool,

@@ -46,6 +46,12 @@ __all__ = [
     "SumReducer",
     "MaxReducer",
     "MinReducer",
+    "MulReducer",
+    "AndReducer",
+    "OrReducer",
+    "XorReducer",
+    "MinimumReducer",
+    "MaximumReducer",
     "Node",
     "Graph",
 ]
@@ -164,7 +170,9 @@ class Reducer:
 
     name: str
     local: Callable  # array -> scalar
-    combine: str     # 'add' | 'max' | 'min' (lax.p* op)
+    combine: str     # 'add'|'mul'|'max'|'min'|'and'|'or'|'xor'|
+                     # 'minimum'|'maximum' (executor picks lax.p* or
+                     # all_gather+fold)
 
 
 def SumReducer() -> Reducer:  # noqa: N802 - mirrors paper naming
@@ -175,19 +183,119 @@ def SumReducer() -> Reducer:  # noqa: N802 - mirrors paper naming
     return Reducer("sum", jnp.sum, "add")
 
 
-def MaxReducer() -> Reducer:  # noqa: N802
-    """Max reduction: ``jnp.max`` per shard + ``lax.pmax`` across shards
-    (e.g. the Euler wavespeed CFL bound)."""
+def _nan_ignoring(reduce_all, reduce_nan):
+    """Per the Ripple spec NaN table, ``min``/``max`` return the NUMBER
+    when one operand is a quiet NaN — i.e. quiet NaNs are ignored (the
+    all-NaN slice still reduces to qNaN)."""
     import jax.numpy as jnp
 
-    return Reducer("max", jnp.max, "max")
+    def local(x):
+        x = jnp.asarray(x)
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return reduce_nan(x)
+        return reduce_all(x)
+
+    return local
+
+
+def _nan_propagating(reduce_all):
+    """``minimum``/``maximum`` semantics: any quiet NaN operand makes the
+    whole reduction qNaN (spec: NUM vs qNaN -> qNaN)."""
+    import jax.numpy as jnp
+
+    def local(x):
+        x = jnp.asarray(x)
+        m = reduce_all(x)
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            m = jnp.where(jnp.isnan(x).any(),
+                          jnp.asarray(jnp.nan, m.dtype), m)
+        return m
+
+    return local
+
+
+def MaxReducer() -> Reducer:  # noqa: N802
+    """Max reduction: NaN-ignoring ``max`` per shard (spec: NUM vs qNaN ->
+    NUM) + ``lax.pmax`` across shards (e.g. the Euler wavespeed CFL
+    bound).  For the NaN-propagating variant use :func:`MaximumReducer`."""
+    import jax.numpy as jnp
+
+    return Reducer("max", _nan_ignoring(jnp.max, jnp.nanmax), "max")
 
 
 def MinReducer() -> Reducer:  # noqa: N802
-    """Min reduction: ``jnp.min`` per shard + ``lax.pmin`` across shards."""
+    """Min reduction: NaN-ignoring ``min`` per shard + ``lax.pmin`` across
+    shards.  For the NaN-propagating variant use :func:`MinimumReducer`."""
     import jax.numpy as jnp
 
-    return Reducer("min", jnp.min, "min")
+    return Reducer("min", _nan_ignoring(jnp.min, jnp.nanmin), "min")
+
+
+def MulReducer() -> Reducer:  # noqa: N802
+    """Product reduction: ``jnp.prod`` per shard; cross-shard combine is an
+    all-gather of the per-shard scalars + local fold (no ``lax.pprod``
+    exists, and the log-sum trick is wrong for zeros/negatives)."""
+    import jax.numpy as jnp
+
+    return Reducer("mul", jnp.prod, "mul")
+
+
+def AndReducer() -> Reducer:  # noqa: N802
+    """Bitwise/logical AND reduction over integer or boolean records
+    (e.g. "did every cell converge" flags); all_gather+fold combine."""
+    import jax.numpy as jnp
+
+    def local(x):
+        x = jnp.asarray(x)
+        init = ~jnp.zeros((), x.dtype)  # all-ones identity (True for bool)
+        from jax import lax as _lax
+        return _lax.reduce(x, init, _lax.bitwise_and, tuple(range(x.ndim)))
+
+    return Reducer("and", local, "and")
+
+
+def OrReducer() -> Reducer:  # noqa: N802
+    """Bitwise/logical OR reduction (e.g. "did any cell hit the boundary"
+    flags); all_gather+fold combine."""
+    import jax.numpy as jnp
+
+    def local(x):
+        x = jnp.asarray(x)
+        from jax import lax as _lax
+        return _lax.reduce(x, jnp.zeros((), x.dtype), _lax.bitwise_or,
+                           tuple(range(x.ndim)))
+
+    return Reducer("or", local, "or")
+
+
+def XorReducer() -> Reducer:  # noqa: N802
+    """Bitwise XOR reduction (parity / checksum-style reductions);
+    all_gather+fold combine."""
+    import jax.numpy as jnp
+
+    def local(x):
+        x = jnp.asarray(x)
+        from jax import lax as _lax
+        return _lax.reduce(x, jnp.zeros((), x.dtype), _lax.bitwise_xor,
+                           tuple(range(x.ndim)))
+
+    return Reducer("xor", local, "xor")
+
+
+def MinimumReducer() -> Reducer:  # noqa: N802
+    """NaN-PROPAGATING min (spec ``minimum``: NUM vs qNaN -> qNaN), the
+    float-only companion of :func:`MinReducer`."""
+    import jax.numpy as jnp
+
+    return Reducer("minimum", _nan_propagating(jnp.min), "minimum")
+
+
+def MaximumReducer() -> Reducer:  # noqa: N802
+    """NaN-PROPAGATING max (spec ``maximum``: NUM vs qNaN -> qNaN), the
+    float-only companion of :func:`MaxReducer`."""
+    import jax.numpy as jnp
+
+    return Reducer("maximum", _nan_propagating(jnp.max), "maximum")
 
 
 NodeArg = Union[DistTensor, TensorArg, ReductionResult, Any]

@@ -16,6 +16,7 @@ Sharding scheme (DESIGN.md §5):
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Optional
 
@@ -24,12 +25,16 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.graph import Graph
+from repro.core.layout import RecordArray
+from repro.core.tensor import DistTensor
 from repro.models import kvcache as kvc
-from repro.models.blocks import ShardCtx
+from repro.models.blocks import ShardCtx, layer_decode, norm_apply
 from repro.models.common import DEFAULT_RULES, spec_tree_to_pspecs
 from repro.models.config import ModelConfig, ShapeCfg
-from repro.models.lm import (decode_step, forward_loss, init_caches, init_lm,
-                             prefill)
+from repro.models.lm import (_prefill_to_decode_cache, decode_step,
+                             decoder_pass, embed_tokens, forward_loss,
+                             init_caches, init_lm, lm_logits, prefill)
 from repro.models.moe import make_moe_a2a
 from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
 from .mesh import dp_axes, tp_size
@@ -367,3 +372,311 @@ def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh],
         return logits, caches
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# graph-native serving: prefill + batched greedy decode as Ripple graphs
+# ---------------------------------------------------------------------------
+#
+# The decode step becomes a Graph with one node per unrolled layer.  Every
+# attention/sliding-window cache is a *record* DistTensor (fields k, v over
+# the (B, S, Hkv) / (B, Hkv, S) space) so the layout solver / measured
+# autotuner — not the model code — picks AoS / SoA / AoSoA storage.  The
+# node fn reads the RecordArray's layout at trace time and re-derives the
+# ModelConfig under it, which makes the model code layout-polymorphic
+# without a single `if` at the call site.
+#
+# Zero-trace serving: node fns close over (cfg, params, ctx).  The ctx is
+# cached per (cfg, mesh, shape) below so a worker process that rebuilds the
+# graph from the SAME cfg/params objects produces an identical plan
+# signature and serves straight from the process-wide executable cache.
+
+_CTX_CACHE: dict = {}
+
+
+def _serving_ctx(cfg: ModelConfig, mesh: Optional[Mesh],
+                 shape: ShapeCfg) -> ShardCtx:
+    """make_ctx with an id-stable result (the executable-cache signature
+    keys closure cells by object identity)."""
+    key = (cfg, None if mesh is None else id(mesh), shape)
+    if key not in _CTX_CACHE:
+        _CTX_CACHE[key] = make_ctx(cfg, mesh, shape)
+    return _CTX_CACHE[key]
+
+
+@dataclass(frozen=True)
+class CacheSlot:
+    """One decode-cache layer lifted into named executor state tensors.
+
+    ``group``/``part`` address the layer inside the legacy cache pytree
+    (``caches["groups"]["p{part}"][group]``; ``group == -1`` -> tail layer
+    ``caches["tail"][part]``).  ``tensors`` is one record DistTensor for
+    attention kinds (A/L) and two plain DistTensors for state-space kinds
+    (M: ssm state + conv buffer; R: rg-lru state + conv buffer)."""
+
+    label: str
+    kind: str
+    group: int
+    part: int
+    tensors: tuple
+
+
+def _slot_tensors(cfg: ModelConfig, label: str, kind: str, batch: int,
+                  max_seq: int, tp: int) -> tuple:
+    dt = cfg.compute_jdtype
+    if kind in ("A", "L"):
+        S = min(cfg.window, max_seq) if kind == "L" else max_seq
+        Hkv = cfg.padded_kv_heads(tp)
+        space = ((batch, S, Hkv) if cfg.kv_order == "bsh"
+                 else (batch, Hkv, S))
+        return (DistTensor(f"kv_{label}", space, dtype=dt,
+                           spec=kvc.kv_spec(cfg.head_dim),
+                           layout=cfg.kv_layout),)
+    if kind == "M":
+        H = cfg.padded_ssm_heads(tp)
+        P_, N, K = cfg.ssm_head_dim, cfg.ssm_state, cfg.d_conv
+        return (DistTensor(f"ssm_{label}", (batch, H, P_, N),
+                           dtype=jnp.float32),
+                DistTensor(f"cv_{label}", (batch, K - 1, H * P_ + 2 * N),
+                           dtype=dt))
+    if kind == "R":
+        R, K = cfg.lru_width, cfg.d_conv
+        return (DistTensor(f"rg_{label}", (batch, R), dtype=jnp.float32),
+                DistTensor(f"cv_{label}", (batch, K - 1, R), dtype=dt))
+    raise ValueError(kind)
+
+
+def serving_cache_slots(cfg: ModelConfig, batch: int, max_seq: int,
+                        tp: int = 1) -> tuple:
+    """Every decode-cache layer as a CacheSlot, in legacy scan order
+    (g0p0, g0p1, ..., g1p0, ..., tail0, ...) so graph-native decode visits
+    layers exactly like ``decode_step``'s lax.scan."""
+    n_groups, pattern, tail = cfg.layer_groups()
+    slots = []
+    for gi in range(n_groups):
+        for pi, kind in enumerate(pattern):
+            label = f"g{gi}p{pi}"
+            slots.append(CacheSlot(label, kind, gi, pi,
+                                   _slot_tensors(cfg, label, kind, batch,
+                                                 max_seq, tp)))
+    for ti, kind in enumerate(tail):
+        label = f"t{ti}"
+        slots.append(CacheSlot(label, kind, -1, ti,
+                               _slot_tensors(cfg, label, kind, batch,
+                                             max_seq, tp)))
+    return tuple(slots)
+
+
+def _slot_params(params, gi: int, pi: int):
+    if gi < 0:
+        return params[f"tail{pi}"]["layer"]
+    return jax.tree.map(lambda x: x[gi], params["groups"][f"p{pi}"])
+
+
+def _guard_graph_serving(cfg: ModelConfig) -> None:
+    if cfg.is_encdec or cfg.frontend_dim:
+        raise NotImplementedError(
+            f"{cfg.name}: graph-native serving covers text-only decoder "
+            f"archs; encoder-decoder / VLM archs serve through the legacy "
+            f"jit path (launch/serve.py falls back automatically)")
+
+
+def _embed_node(cfg: ModelConfig, ctx: ShardCtx, params):
+    def embed(tokens_t, h_t):
+        return embed_tokens(params, tokens_t, cfg, ctx)
+    return embed
+
+
+def _attn_layer_node(cfg: ModelConfig, ctx: ShardCtx, params,
+                     slot: CacheSlot):
+    gi, pi, kind = slot.group, slot.part, slot.kind
+
+    def layer(h_t, kv, pos):
+        # the solver's layout choice arrives on the RecordArray; re-derive
+        # the config under it so the kernel code is layout-polymorphic
+        lcfg = cfg.with_(kv_layout=kv.layout)
+        p = _slot_params(params, gi, pi)
+        h2, store = layer_decode(p, h_t, kind, lcfg, ctx,
+                                 cache=kv.data, pos=pos)
+        return h2, RecordArray(store, kv.spec, kv.layout)
+
+    return layer
+
+
+def _state_layer_node(cfg: ModelConfig, ctx: ShardCtx, params,
+                      slot: CacheSlot):
+    gi, pi, kind = slot.group, slot.part, slot.kind
+
+    def layer(h_t, s0, s1, pos):
+        p = _slot_params(params, gi, pi)
+        h2, (n0, n1) = layer_decode(p, h_t, kind, cfg, ctx,
+                                    cache=(s0, s1), pos=pos)
+        return h2, n0, n1
+
+    return layer
+
+
+def _head_node(cfg: ModelConfig, ctx: ShardCtx, params):
+    def head(h_t, tokens_t, pos, active):
+        hn = norm_apply(params["final"], h_t, cfg, "ln")
+        logits = lm_logits(params, hn, cfg, ctx)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, tokens_t)
+        return nxt, pos + active.astype(jnp.int32)
+    return head
+
+
+@dataclass(frozen=True)
+class DecodeGraph:
+    """Graph + tensor handles for one batched greedy-decode step.
+
+    State layout: ``tokens``/``pos``/``active`` are (B,) per-slot vectors
+    (continuous batching: every batch slot sits at its own depth; inactive
+    slots keep their token and don't advance), ``h`` is the (B, d_model)
+    residual scratch, and each CacheSlot contributes its cache tensors."""
+
+    graph: Graph
+    tokens: DistTensor
+    pos: DistTensor
+    active: DistTensor
+    h: DistTensor
+    slots: tuple
+
+
+@dataclass(frozen=True)
+class PrefillGraph:
+    """Graph + tensor handles for a single-request (B=1) prefill.
+
+    Writes every decode-cache slot (batch=1) plus ``first`` — the argmax
+    token following the prompt; the batcher scatters these into the decode
+    state's batch slot at admission."""
+
+    graph: Graph
+    prompt: DistTensor
+    hseq: DistTensor
+    hlast: DistTensor
+    first: DistTensor
+    slots: tuple
+
+
+def cache_state_overrides(cfg: ModelConfig, slots: tuple, caches) -> dict:
+    """Map a legacy ``prefill()``/``init_caches()`` cache pytree onto the
+    graph state names (``Executor.init_state(**overrides)`` kwargs).
+    Attention storages arrive in ``cfg.kv_layout`` and are wrapped as
+    RecordArrays so init_state relayouts them to the solver's choice."""
+    out = {}
+    for slot in slots:
+        if slot.group < 0:
+            entry = caches["tail"][slot.part]
+        else:
+            entry = jax.tree.map(lambda x: x[slot.group],
+                                 caches["groups"][f"p{slot.part}"])
+        if slot.kind in ("A", "L"):
+            out[slot.tensors[0].name] = RecordArray(
+                entry, kvc.kv_spec(cfg.head_dim), cfg.kv_layout)
+        else:
+            out[slot.tensors[0].name] = entry[0]
+            out[slot.tensors[1].name] = entry[1]
+    return out
+
+
+_SERVE_GRAPH_CACHE: dict = {}
+
+
+def make_decode_graph(cfg: ModelConfig, params, *, batch: int, max_seq: int,
+                      mesh: Optional[Mesh] = None) -> DecodeGraph:
+    """One greedy-decode step for ``batch`` slots as a Ripple graph.
+
+    Node order mirrors ``decode_step``'s scan exactly (embed -> every
+    unrolled layer in g0p0.. order -> final-norm/logits/argmax head) so
+    the argmax token sequence is bit-identical to the legacy jit path."""
+    _guard_graph_serving(cfg)
+    key = ("decode", id(cfg), id(params), batch, max_seq,
+           None if mesh is None else id(mesh))
+    if key in _SERVE_GRAPH_CACHE:
+        return _SERVE_GRAPH_CACHE[key]
+    shape = ShapeCfg(f"serve_decode_b{batch}", "decode", max_seq, batch)
+    ctx = _serving_ctx(cfg, mesh, shape)
+    tp = 1 if mesh is None else tp_size(mesh)
+    tokens = DistTensor("tokens", (batch,), dtype=jnp.int32)
+    pos = DistTensor("pos", (batch,), dtype=jnp.int32)
+    active = DistTensor("active", (batch,), dtype=jnp.bool_)
+    h = DistTensor("h", (batch, cfg.d_model), dtype=cfg.compute_jdtype)
+    slots = serving_cache_slots(cfg, batch, max_seq, tp)
+    g = Graph(name=f"decode_{cfg.name}")
+    g.then(_embed_node(cfg, ctx, params), args=(tokens, h), writes=(1,))
+    for slot in slots:
+        if slot.kind in ("A", "L"):
+            kv, = slot.tensors
+            g.then(_attn_layer_node(cfg, ctx, params, slot),
+                   args=(h, kv, pos), writes=(0, 1))
+        else:
+            s0, s1 = slot.tensors
+            g.then(_state_layer_node(cfg, ctx, params, slot),
+                   args=(h, s0, s1, pos), writes=(0, 1, 2))
+    g.then(_head_node(cfg, ctx, params),
+           args=(h, tokens, pos, active), writes=(1, 2))
+    out = DecodeGraph(g, tokens, pos, active, h, slots)
+    _SERVE_GRAPH_CACHE[key] = out
+    return out
+
+
+def make_prefill_graph(cfg: ModelConfig, params, *, prompt_len: int,
+                       max_seq: int,
+                       mesh: Optional[Mesh] = None) -> PrefillGraph:
+    """B=1 prompt processing as a Ripple graph: embed -> decoder pass
+    (emitting every layer's decode-ready cache) -> first-token head.
+
+    The cache writes are RecordArrays in ``cfg.kv_layout``; the executor
+    relayouts them in-trace to whatever layout its solver chose, so the
+    prefill and decode plans may disagree about storage freely."""
+    _guard_graph_serving(cfg)
+    key = ("prefill", id(cfg), id(params), prompt_len, max_seq,
+           None if mesh is None else id(mesh))
+    if key in _SERVE_GRAPH_CACHE:
+        return _SERVE_GRAPH_CACHE[key]
+    shape = ShapeCfg(f"serve_prefill_s{prompt_len}", "prefill",
+                     prompt_len, 1)
+    ctx = _serving_ctx(cfg, mesh, shape)
+    tp = 1 if mesh is None else tp_size(mesh)
+    dt = cfg.compute_jdtype
+    prompt = DistTensor("prompt", (1, prompt_len), dtype=jnp.int32)
+    hseq = DistTensor("hseq", (1, prompt_len, cfg.d_model), dtype=dt)
+    hlast = DistTensor("hlast", (1, cfg.d_model), dtype=dt)
+    first = DistTensor("first", (1,), dtype=jnp.int32)
+    slots = serving_cache_slots(cfg, 1, max_seq, tp)
+    flat = tuple(t for slot in slots for t in slot.tensors)
+
+    def body(h_, hl_, *cache_vals):
+        positions = jnp.arange(h_.shape[1], dtype=jnp.int32)
+        hh = ctx.constrain(h_, P(ctx.ba, None, None))
+        hh, _, raw = decoder_pass(params, hh, cfg, ctx,
+                                  positions=positions, want_cache=True)
+        outs = []
+        for slot in slots:
+            if slot.group < 0:
+                raw_entry = raw["tail"][slot.part]
+            else:
+                raw_entry = jax.tree.map(lambda x: x[slot.group],
+                                         raw["groups"][f"p{slot.part}"])
+            store = _prefill_to_decode_cache(raw_entry, slot.kind, cfg, 1,
+                                             max_seq, dt, ctx.tp)
+            if slot.kind in ("A", "L"):
+                outs.append(RecordArray(store, kvc.kv_spec(cfg.head_dim),
+                                        cfg.kv_layout))
+            else:
+                outs.extend(store)
+        return (hh[:, -1], *outs)
+
+    def head(hl_, first_):
+        logits = lm_logits(params, hl_, cfg, ctx)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    g = Graph(name=f"prefill_{cfg.name}_s{prompt_len}")
+    g.then(_embed_node(cfg, ctx, params), args=(prompt, hseq), writes=(1,))
+    g.then(body, args=(hseq, hlast, *flat),
+           writes=tuple(range(1, 2 + len(flat))))
+    g.then(head, args=(hlast, first), writes=(1,))
+    out = PrefillGraph(g, prompt, hseq, hlast, first, slots)
+    _SERVE_GRAPH_CACHE[key] = out
+    return out

@@ -209,6 +209,10 @@ def fill_attn_cache(storage, k, v, cfg: ModelConfig,
 
 
 def _cache_seq_len(storage, cfg: ModelConfig) -> int:
+    if cfg.kv_layout is Layout.AOSOA:
+        if cfg.kv_order == "bsh":      # (B, S, Hkv//t, C, t)
+            return storage.shape[1]
+        return storage.shape[2] * storage.shape[4]  # (B, Hkv, S//t, C, t)
     i = 1 if cfg.kv_order == "bsh" else 2
     if cfg.kv_layout is not Layout.AOS:
         i += 1
@@ -217,22 +221,27 @@ def _cache_seq_len(storage, cfg: ModelConfig) -> int:
 
 def _ring_kpos(pos: jax.Array, W: int) -> jax.Array:
     """Global position held by each ring slot after writing ``pos``;
-    unwritten slots get BIG_POS (masked by cache_len)."""
+    unwritten slots get BIG_POS (masked by cache_len).  ``pos`` scalar ->
+    (W,); per-slot vector (B,) -> (B, W)."""
     i = jnp.arange(W, dtype=jnp.int32)
-    p = pos - ((pos - i) % W)
+    p = pos[..., None] - ((pos[..., None] - i) % W)
     return jnp.where(p >= 0, p, BIG_POS)
 
 
 def attention_decode(p, h_t, cache, pos, cfg: ModelConfig, ctx: ShardCtx, *,
                      window: Optional[int] = None,
                      cross_len: Optional[int] = None):
-    """One-token attention. h_t (B, d); cache = kv storage; pos = scalar
-    position of the incoming token.  cross_len: cache is a frozen encoder
-    cache of that length (no write, no rope, no mask beyond length)."""
+    """One-token attention. h_t (B, d); cache = kv storage; pos = position
+    of the incoming token: a scalar (uniform batch) or a (B,) vector of
+    per-slot positions (continuous batching).  cross_len: cache is a frozen
+    encoder cache of that length (no write, no rope, no mask beyond
+    length)."""
     B, d = h_t.shape
     cdt = h_t.dtype
     q = jnp.einsum("bd,dhk->bhk", h_t, p["wq"].astype(cdt))
     if cross_len is None:
+        pos = jnp.asarray(pos, jnp.int32)
+        ragged = pos.ndim == 1
         k_t = jnp.einsum("bd,dhk->bhk", h_t, p["wk"].astype(cdt))
         v_t = jnp.einsum("bd,dhk->bhk", h_t, p["wv"].astype(cdt))
         if "bq" in p:
@@ -242,19 +251,23 @@ def attention_decode(p, h_t, cache, pos, cfg: ModelConfig, ctx: ShardCtx, *,
         if "q_norm" in p:
             q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
             k_t = rms_norm(k_t, p["k_norm"], eps=cfg.norm_eps)
-        cos, sin = _rope_tables(cfg, pos[None].astype(jnp.int32))
-        q = apply_rope(q[:, None], cos[None], sin[None],
-                       mode=cfg.rope_mode)[:, 0]
-        k_t = apply_rope(k_t[:, None], cos[None], sin[None],
-                         mode=cfg.rope_mode)[:, 0]
+        if ragged:  # per-slot rope rows, broadcast over heads only
+            cos, sin = _rope_tables(cfg, pos)
+            cos, sin = cos[:, None], sin[:, None]
+        else:
+            cos, sin = _rope_tables(cfg, pos[None])
+            cos, sin = cos[None], sin[None]
+        q = apply_rope(q[:, None], cos, sin, mode=cfg.rope_mode)[:, 0]
+        k_t = apply_rope(k_t[:, None], cos, sin, mode=cfg.rope_mode)[:, 0]
         if window:
             W = _cache_seq_len(cache, cfg)
             slot = (pos % W).astype(jnp.int32)
             cache = kvc.kv_write_token(cache, k_t, v_t, slot, cfg.kv_layout,
                                        cfg.kv_order)
-            kpos = jnp.broadcast_to(_ring_kpos(pos, W)[None], (B, W))
+            kp = _ring_kpos(pos, W)
+            kpos = kp if ragged else jnp.broadcast_to(kp[None], (B, W))
         else:
-            cache = kvc.kv_write_token(cache, k_t, v_t, pos.astype(jnp.int32),
+            cache = kvc.kv_write_token(cache, k_t, v_t, pos,
                                        cfg.kv_layout, cfg.kv_order)
             kpos = None
         cache_len = jnp.broadcast_to(pos + 1, (B,)).astype(jnp.int32)

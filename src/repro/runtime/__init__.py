@@ -1,5 +1,15 @@
-"""Fault-tolerant training runtime."""
+"""Fault-tolerant training + serving runtime."""
 
 from .supervisor import StepStats, Supervisor, TransientError
 
-__all__ = ["Supervisor", "StepStats", "TransientError"]
+__all__ = ["Batcher", "Request", "Supervisor", "StepStats",
+           "TransientError"]
+
+
+def __getattr__(name):
+    # Batcher pulls in launch.steps (graph builders); import lazily so
+    # `import repro.runtime` stays cheap for training-only users.
+    if name in ("Batcher", "Request"):
+        from . import batcher
+        return getattr(batcher, name)
+    raise AttributeError(name)

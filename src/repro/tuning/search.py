@@ -223,7 +223,7 @@ def measure_plan(executor, key: str) -> TuningDecision:
         if probe:
             tile_cfg["__tune_probe__"] = nonce
         tile_cfg.update(tiles)
-        ex = Executor(graph, mesh=mesh, donate=False,
+        ex = Executor(graph, mesh=mesh, donate=executor.donate,
                       layout_overrides={**executor._layout_overrides,
                                         **layouts},
                       schedule=executor.schedule,
@@ -232,8 +232,22 @@ def measure_plan(executor, key: str) -> TuningDecision:
         candidate_sigs.append(ex._plan_sig)
         state = ex.init_state(**executor._tune_inputs)
 
-        def run_once():
-            return ex.run(dict(state), TUNE_STEPS)
+        if executor.donate:
+            # measure under the plan's REAL donation setting: donation
+            # consumes input buffers, so copy the initial state (the
+            # caller's tune_inputs must survive every candidate) and chain
+            # each timed call on the previous output
+            import jax
+            import jax.numpy as jnp
+
+            carry = {"st": jax.tree_util.tree_map(jnp.array, state)}
+
+            def run_once():
+                carry["st"] = ex.run(dict(carry["st"]), TUNE_STEPS)
+                return carry["st"]
+        else:
+            def run_once():
+                return ex.run(dict(state), TUNE_STEPS)
 
         recorder = tiles_lib.record_tile_use() if probe else None
         if recorder is not None:
@@ -287,13 +301,12 @@ def measure_plan(executor, key: str) -> TuningDecision:
                     best_ms, best_sig = s, sig
                     best_tiles = {**best_tiles, kernel: tile}
     finally:
-        # drop the candidate executables; the winner's is kept only when
-        # the caller's executor will actually reuse it (candidates bench
-        # with donate=False, and donation is part of the plan signature,
-        # so under donate=True the entry could never be fetched again)
-        keep = best_sig if not executor.donate else None
+        # drop the losing candidates' executables; the winner benched under
+        # the caller's own donation setting (donation is part of the plan
+        # signature), so the caller's executor fetches it straight from the
+        # cache with zero new traces
         for sig in candidate_sigs:
-            if sig != keep:
+            if sig != best_sig:
                 executor_lib._EXECUTABLE_CACHE.pop(sig, None)
 
     chosen_keys = ({("layout", k, v.name) for k, v in best_layouts.items()}

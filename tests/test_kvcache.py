@@ -11,7 +11,10 @@ from repro.models import kvcache as kvc
 B, S, H, D = 2, 8, 3, 4
 
 
-@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+LAYOUTS = [Layout.AOS, Layout.SOA, Layout.AOSOA]
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
 @pytest.mark.parametrize("order", ["bsh", "bhs"])
 def test_prefill_roundtrip(rng, layout, order):
     k = jnp.asarray(rng.standard_normal((B, S, H, D), dtype=np.float32))
@@ -25,7 +28,7 @@ def test_prefill_roundtrip(rng, layout, order):
     np.testing.assert_allclose(np.asarray(v2), np.asarray(v), rtol=1e-6)
 
 
-@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+@pytest.mark.parametrize("layout", LAYOUTS)
 @pytest.mark.parametrize("order", ["bsh", "bhs"])
 def test_token_write(rng, layout, order):
     store = kvc.kv_make(B, S, H, D, jnp.float32, layout, order)
@@ -43,7 +46,7 @@ def test_token_write(rng, layout, order):
     assert float(jnp.abs(k2[:, 6:]).max()) == 0.0
 
 
-@pytest.mark.parametrize("layout", [Layout.AOS, Layout.SOA])
+@pytest.mark.parametrize("layout", LAYOUTS)
 @pytest.mark.parametrize("order", ["bsh", "bhs"])
 def test_pspec_rank_matches_storage(layout, order):
     store = kvc.kv_make(B, S, H, D, jnp.float32, layout, order)
@@ -54,7 +57,11 @@ def test_pspec_rank_matches_storage(layout, order):
     seq_dim = [i for i, e in enumerate(ps)
                if e == ("model",) or e == "model"]
     assert len(seq_dim) == 1
-    assert store.shape[seq_dim[0]] == S
+    if layout is Layout.AOSOA and order == "bhs":
+        # the tiled sequence axis shards on its tile-MAJOR extent
+        assert store.shape[seq_dim[0]] * store.shape[-1] == S
+    else:
+        assert store.shape[seq_dim[0]] == S
 
 
 def test_registry_aliases():
@@ -67,8 +74,72 @@ def test_registry_aliases():
         assert C.get(a).name == a
 
 
-def test_aosoa_rejected():
-    """kvcache accessors dynamic-slice the sequence axis, which AOSOA
-    tiles — constructing such a cache must fail loudly, not later."""
-    with pytest.raises(ValueError, match="AOS/SOA only"):
-        kvc.kv_make(B, S, H, D, layout=Layout.AOSOA)
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("order", ["bsh", "bhs"])
+def test_vector_pos_token_write(rng, layout, order):
+    """Continuous batching: every batch slot writes at its OWN depth."""
+    store = kvc.kv_make(B, S, H, D, jnp.float32, layout, order)
+    k_t = jnp.asarray(rng.standard_normal((B, H, D), dtype=np.float32))
+    v_t = jnp.asarray(rng.standard_normal((B, H, D), dtype=np.float32))
+    pos = jnp.asarray([2, 6], jnp.int32)          # per-slot positions
+    store = kvc.kv_write_token(store, k_t, v_t, pos, layout, order)
+    k2, v2 = kvc.kv_read(store, D, layout, order)
+    if order == "bhs":
+        k2, v2 = jnp.swapaxes(k2, 1, 2), jnp.swapaxes(v2, 1, 2)
+    k2, v2 = np.asarray(k2), np.asarray(v2)
+    for b in range(B):
+        p = int(pos[b])
+        np.testing.assert_allclose(k2[b, p], np.asarray(k_t[b]), rtol=1e-6)
+        np.testing.assert_allclose(v2[b, p], np.asarray(v_t[b]), rtol=1e-6)
+        mask = np.ones(S, bool)
+        mask[p] = False
+        assert np.abs(k2[b, mask]).max() == 0.0
+        assert np.abs(v2[b, mask]).max() == 0.0
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("order", ["bsh", "bhs"])
+def test_prefill_then_decode_roundtrip(rng, layout, order):
+    """Prefill S0 positions, then append tokens one by one (scalar pos) —
+    the assembled cache must equal the dense reference regardless of the
+    storage layout the solver picked."""
+    S0 = 3
+    k = rng.standard_normal((B, S, H, D)).astype(np.float32)
+    v = rng.standard_normal((B, S, H, D)).astype(np.float32)
+    store = kvc.kv_make(B, S, H, D, jnp.float32, layout, order)
+    store = kvc.kv_write_prefill(store, jnp.asarray(k[:, :S0]),
+                                 jnp.asarray(v[:, :S0]), layout, order)
+    for t in range(S0, S):
+        store = kvc.kv_write_token(store, jnp.asarray(k[:, t]),
+                                   jnp.asarray(v[:, t]), jnp.int32(t),
+                                   layout, order)
+    k2, v2 = kvc.kv_read(store, D, layout, order)
+    if order == "bhs":
+        k2, v2 = jnp.swapaxes(k2, 1, 2), jnp.swapaxes(v2, 1, 2)
+    np.testing.assert_allclose(np.asarray(k2), k, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), v, rtol=1e-6)
+
+
+@pytest.mark.parametrize("order", ["bsh", "bhs"])
+def test_layout_value_equivalence(rng, order):
+    """The same write sequence through every layout yields identical
+    logical values — layout is pure storage polymorphism."""
+    k0 = rng.standard_normal((B, 4, H, D)).astype(np.float32)
+    v0 = rng.standard_normal((B, 4, H, D)).astype(np.float32)
+    kt = rng.standard_normal((B, H, D)).astype(np.float32)
+    vt = rng.standard_normal((B, H, D)).astype(np.float32)
+    got = {}
+    for layout in LAYOUTS:
+        store = kvc.kv_make(B, S, H, D, jnp.float32, layout, order)
+        store = kvc.kv_write_prefill(store, jnp.asarray(k0),
+                                     jnp.asarray(v0), layout, order)
+        store = kvc.kv_write_token(store, jnp.asarray(kt), jnp.asarray(vt),
+                                   jnp.asarray([4, 5], jnp.int32),
+                                   layout, order)
+        k2, v2 = kvc.kv_read(store, D, layout, order)
+        got[layout] = (np.asarray(k2), np.asarray(v2))
+    for layout in LAYOUTS[1:]:
+        np.testing.assert_allclose(got[layout][0], got[LAYOUTS[0]][0],
+                                   rtol=1e-6, err_msg=str(layout))
+        np.testing.assert_allclose(got[layout][1], got[LAYOUTS[0]][1],
+                                   rtol=1e-6, err_msg=str(layout))

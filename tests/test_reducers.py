@@ -1,0 +1,106 @@
+"""Reduction library: mul / bitwise and-or-xor + the NaN-correct
+min/max pairs (spec table: ``min``/``max`` IGNORE quiet NaNs,
+``minimum``/``maximum`` PROPAGATE them)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_devices
+from repro.core import (AndReducer, DistTensor, Graph, MaxReducer,
+                        MaximumReducer, MinReducer, MinimumReducer,
+                        MulReducer, OrReducer, XorReducer, execute,
+                        make_reduction_result)
+
+
+def _reduce_value(values, reducer, dtype, init=0.0):
+    x = DistTensor("x", (len(values),), dtype=dtype)
+    res = make_reduction_result("r", init=init, dtype=dtype)
+    g = Graph()
+    g.reduce(x, res, reducer)
+    state = execute(g, x=jnp.asarray(values, dtype))
+    return np.asarray(state["r"])
+
+
+def test_mul_reducer():
+    got = _reduce_value([2.0, -3.0, 0.5, 4.0], MulReducer(), jnp.float32)
+    np.testing.assert_allclose(got, -12.0)
+    # zeros must work (no log-sum tricks)
+    assert _reduce_value([2.0, 0.0, 5.0], MulReducer(), jnp.float32) == 0.0
+    assert _reduce_value([3, 5, 7], MulReducer(), jnp.int32) == 105
+
+
+def test_bitwise_reducers_int():
+    vals = [0b1100, 0b1010, 0b1110]
+    assert _reduce_value(vals, AndReducer(), jnp.int32) == 0b1000
+    assert _reduce_value(vals, OrReducer(), jnp.int32) == 0b1110
+    assert _reduce_value(vals, XorReducer(), jnp.int32) == (
+        0b1100 ^ 0b1010 ^ 0b1110)
+
+
+def test_logical_reducers_bool():
+    assert _reduce_value([True, True, False], AndReducer(),
+                         jnp.bool_) == False          # noqa: E712
+    assert _reduce_value([False, False, True], OrReducer(),
+                         jnp.bool_) == True           # noqa: E712
+    assert _reduce_value([True, True, True], AndReducer(),
+                         jnp.bool_) == True           # noqa: E712
+
+
+def test_min_max_ignore_quiet_nan():
+    vals = [1.0, np.nan, 3.0]
+    assert _reduce_value(vals, MaxReducer(), jnp.float32) == 3.0
+    assert _reduce_value(vals, MinReducer(), jnp.float32) == 1.0
+    # the all-NaN slice still reduces to qNaN
+    assert np.isnan(_reduce_value([np.nan, np.nan], MaxReducer(),
+                                  jnp.float32))
+
+
+def test_minimum_maximum_propagate_quiet_nan():
+    vals = [1.0, np.nan, 3.0]
+    assert np.isnan(_reduce_value(vals, MaximumReducer(), jnp.float32))
+    assert np.isnan(_reduce_value(vals, MinimumReducer(), jnp.float32))
+    # no NaN present: plain extrema
+    assert _reduce_value([1.0, 3.0], MaximumReducer(), jnp.float32) == 3.0
+    assert _reduce_value([1.0, 3.0], MinimumReducer(), jnp.float32) == 1.0
+
+
+def test_int_minmax_unaffected():
+    assert _reduce_value([4, -2, 9], MaxReducer(), jnp.int32) == 9
+    assert _reduce_value([4, -2, 9], MinimumReducer(), jnp.int32) == -2
+
+
+@pytest.mark.slow
+def test_fold_combiners_sharded():
+    """mul/xor/maximum have no lax.p* collective — the executor combines
+    them with all_gather + local fold; the sharded result must equal the
+    single-device reference (incl. NaN propagation across shards)."""
+    run_subprocess_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (DistTensor, Executor, Graph, MaximumReducer,
+                        MulReducer, XorReducer, make_mesh,
+                        make_reduction_result)
+mesh = make_mesh((4,), ("gx",))
+size = 16
+
+def run(reducer, vals, dtype):
+    x = DistTensor("x", (size,), dtype=dtype, partition=("gx",))
+    res = make_reduction_result("r", dtype=dtype)
+    g = Graph()
+    g.split(lambda xs: xs, x, writes=(0,))
+    g.then_reduce(x, res, reducer)
+    ex = Executor(g, mesh=mesh)
+    st = ex(ex.init_state(x=jnp.asarray(vals, dtype)))
+    return np.asarray(st["r"])
+
+rng = np.random.default_rng(0)
+fvals = rng.uniform(0.5, 1.5, size).astype(np.float32)
+np.testing.assert_allclose(run(MulReducer(), fvals, jnp.float32),
+                           np.prod(fvals), rtol=1e-5)
+ivals = rng.integers(0, 1 << 16, size).astype(np.int32)
+assert run(XorReducer(), ivals, jnp.int32) == np.bitwise_xor.reduce(ivals)
+# NaN on ONE shard must poison the cross-shard maximum
+nvals = fvals.copy(); nvals[9] = np.nan
+assert np.isnan(run(MaximumReducer(), nvals, jnp.float32))
+print("OK")
+""")

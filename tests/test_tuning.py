@@ -136,6 +136,32 @@ def test_auto_measures_commits_and_matches_heuristic_values():
         np.asarray(ex.read(s1, p).field("a")), rtol=1e-6)
 
 
+def test_auto_measures_under_donation():
+    """Candidates bench under the CALLER's donation setting (donation is
+    part of the plan signature): a donating executor's tuner times the
+    real donating executables — chaining state through each timed call —
+    and the committed plan still matches the heuristic values."""
+    g, p = _record_graph(name="pd")
+    ex = Executor(g, tune="auto")                 # donate=True default
+    assert ex.donate
+    dec = ex.plan.tuning
+    assert dec is not None and dec.source == "measured"
+    assert tune_search.STATS["measurements"] >= 3
+
+    base = Executor(g, donate=False)
+    s0 = base.run(base.init_state(), 3)
+    s1 = ex.run(ex.init_state(), 3)
+    np.testing.assert_allclose(
+        np.asarray(base.read(s0, p).field("a")),
+        np.asarray(ex.read(s1, p).field("a")), rtol=1e-6)
+
+    # second donating construction: cache hit, zero new measurements
+    measured = tune_search.STATS["measurements"]
+    ex2 = Executor(g, tune="auto")
+    assert tune_search.STATS["measurements"] == measured
+    assert ex2.plan.tuning.source == "cache"
+
+
 def test_tuned_kernel_tiles_apply_and_preserve_values():
     g, r = _kernel_graph()
     ex = Executor(g, donate=False, tune="auto")

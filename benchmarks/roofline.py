@@ -1,102 +1,164 @@
-"""Roofline analysis over the dry-run records (EXPERIMENTS.md §Roofline).
+"""Per-kernel roofline: achieved GB/s vs. estimated peak bandwidth.
 
-Reads the JSON written by ``python -m repro.launch.dryrun --all --out X``
-and derives, per (arch x shape x mesh):
+Every Ripple kernel in this repo is memory-bound at benchmark sizes, so
+the honest performance number is *achieved bandwidth from known
+bytes-moved* against an *estimated peak* — not milliseconds (the
+related Triton exemplar reports exactly this, see ROADMAP §benchmarks).
+Two peaks are reported:
 
-  compute term    = HLO_FLOPs / peak_FLOP/s              (per chip)
-  memory term     = HLO_bytes / HBM_bw                   (per chip)
-  collective term = collective_link_bytes / link_bw      (per chip)
+* ``copy_peak_gbps`` — MEASURED on this machine: a large ``jnp.copy``
+  stream (read + write every byte) is the practical ceiling any kernel
+  here could reach; each kernel row reports the fraction of it
+  achieved.  This is the number that transfers across hosts/backends.
+* reference-hardware constants (:data:`HBM_BW` etc., TPU v5e class)
+  stay exported for the cross-table roofline arithmetic other modules
+  and docs refer to (``common.gbps`` fractions, flash_projection).
 
-Hardware constants (TPU v5e class, per the brief): 197 TFLOP/s bf16,
-819 GB/s HBM, ~50 GB/s/link ICI.  The dominant term is the bottleneck;
-MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train cells gives
-the useful-compute ratio.
+Bytes-moved per kernel is analytic, never scraped from timings:
+
+=============  =====================================================
+kernel         known bytes per invocation
+=============  =====================================================
+saxpy          read x, read y, write out — 3 f32 streams
+saxpy_record   read + write the whole 2-field record storage
+particle       read + write the whole {x,v} record storage
+flux           read the padded record, write the interior record
+=============  =====================================================
+
+Record kernels run through the XLA path (``use_pallas=False``): on CPU
+the Pallas backend is interpret-mode emulation whose wall-clock
+measures the emulator, not memory traffic.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--json PATH]
+
+Wired into ``benchmarks.run`` (suite "Roofline (achieved vs peak
+GB/s)") whose nightly CI artifact tracks the trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
+import sys
+import time
 
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Csv, gbps, time_fn
+
+# reference hardware constants (TPU v5e class, per the brief) — the
+# cross-table roofline terms other benchmarks/docs compare against
 PEAK_FLOPS = 197e12     # bf16 / chip
 HBM_BW = 819e9          # bytes/s
 LINK_BW = 50e9          # bytes/s/link (ICI); pod axis rides DCN (slower)
 
-# active params per token (N or N_active), from configs at import time
-def _active_params():
-    import repro.configs as C
-    from repro.models.lm import param_count
-    out = {}
-    for arch in C.ARCH_IDS:
-        cfg = C.get(arch)
-        n = param_count(cfg, tp=1)
-        if cfg.n_experts:
-            # active = total - (all experts) + (top_k experts + dense)
-            per_expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_layers
-            n_active = n - cfg.n_experts * per_expert \
-                + cfg.top_k * per_expert
-            out[arch] = (n, n_active)
-        else:
-            out[arch] = (n, n)
-    return out
+
+def measure_copy_peak(n_floats: int = 1 << 21) -> float:
+    """Measured streaming-copy bandwidth of THIS machine in GB/s: one
+    ``jnp.copy`` of ``n_floats`` f32 reads and writes every byte, so
+    ``2 * 4 * n_floats`` bytes over the median time is the practical
+    ceiling for any memory-bound kernel here.  The default working set
+    matches the kernel rows' so cache residency cancels out of the
+    fraction; fractions can still drift past 1 on CPU (copy is one
+    stream, saxpy is three — more of it re-hits cache)."""
+    x = jnp.arange(n_floats, dtype=jnp.float32)
+    ms = time_fn(jnp.copy, x)
+    return gbps(2 * x.nbytes, ms)
 
 
-def terms(rec: dict) -> dict:
-    t_c = rec["flops"] / PEAK_FLOPS
-    t_m = rec["bytes_accessed"] / HBM_BW
-    t_l = rec["collective_link_bytes"] / LINK_BW
-    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_l),
-              key=lambda kv: kv[1])
-    bound = max(t_c, t_m, t_l)
-    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
-            "dominant": dom[0], "step_lower_bound_s": bound,
-            "roofline_fraction": t_c / bound if bound > 0 else 0.0}
+def _row(csv, kernel, n_label, ms, nbytes, peak):
+    achieved = gbps(nbytes, ms)
+    csv.row(kernel, n_label, ms, nbytes, achieved, peak,
+            achieved / max(peak, 1e-9),
+            achieved / (HBM_BW / 1e9))
+    return achieved
 
 
-def model_flops(arch: str, shape_name: str, devices: int,
-                active: dict) -> float:
-    from repro.models.config import SHAPES
-    shape = SHAPES[shape_name]
-    n, n_active = active[arch]
-    if shape.kind == "train":
-        tokens = shape.seq_len * shape.global_batch
-        return 6.0 * n_active * tokens / devices
-    if shape.kind == "prefill":
-        tokens = shape.seq_len * shape.global_batch
-        return 2.0 * n_active * tokens / devices
-    return 2.0 * n_active * shape.global_batch / devices  # decode: 1 token
+def main(n=1 << 20, particle_n=262_144, flux_shape=(256, 256),
+         json_path=None) -> list[dict]:
+    """Per-kernel achieved GB/s against the measured copy peak (and the
+    reference-TPU HBM fraction).  Returns the CSV rows; hard-asserts
+    only sanity (positive bandwidths), not fractions — CPU CI noise
+    would make fraction gates flaky."""
+    csv = Csv("kernel", "size", "steady_ms", "known_bytes",
+              "achieved_gbps", "copy_peak_gbps", "frac_of_copy_peak",
+              "frac_of_ref_hbm")
+    rng = np.random.default_rng(0)
+    peak = measure_copy_peak()
 
+    # -- saxpy (array form: the 3-stream classic) ---------------------------
+    from repro.kernels.saxpy.ops import saxpy
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--records", default="dryrun_results.json")
-    ap.add_argument("--out", default=None)
-    args = ap.parse_args(argv)
-    with open(args.records) as f:
-        recs = json.load(f)
-    active = _active_params()
-    rows = []
-    hdr = (f"{'arch':24s} {'shape':11s} {'mesh':8s} {'compute_s':>9s} "
-           f"{'memory_s':>9s} {'collect_s':>9s} {'bound':>10s} "
-           f"{'MF/HLO':>7s} {'roofl%':>7s}")
-    print(hdr)
-    for rec in recs:
-        if not rec.get("ok"):
-            print(f"{rec['arch']:24s} {rec['shape']:11s} {rec['mesh']:8s} "
-                  f"FAILED: {rec.get('error', '?')[:60]}")
-            continue
-        t = terms(rec)
-        mf = model_flops(rec["arch"], rec["shape"], rec["devices"], active)
-        ratio = mf / rec["flops"] if rec["flops"] else 0.0
-        rows.append({**rec, **t, "model_flops": mf, "useful_ratio": ratio})
-        print(f"{rec['arch']:24s} {rec['shape']:11s} {rec['mesh']:8s} "
-              f"{t['compute_s']:9.3f} {t['memory_s']:9.3f} "
-              f"{t['collective_s']:9.3f} {t['dominant']:>10s} "
-              f"{ratio:7.2f} {t['roofline_fraction']*100:6.1f}%")
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
+    x = jnp.asarray(rng.standard_normal(n, dtype=np.float32))
+    y = jnp.asarray(rng.standard_normal(n, dtype=np.float32))
+    ms = time_fn(saxpy, 2.0, x, y, use_pallas=False)
+    _row(csv, "saxpy", n, ms, 3 * n * 4, peak)
+
+    # -- saxpy (record form: layout-polymorphic storage) --------------------
+    from repro.core import Layout, RecordArray
+    from repro.kernels.saxpy.kernel import SAXPY_SPEC
+    from repro.kernels.saxpy.ops import saxpy_record
+
+    rec = RecordArray.from_fields(
+        SAXPY_SPEC,
+        {"x": jnp.asarray(rng.standard_normal(n, dtype=np.float32)),
+         "y": jnp.asarray(rng.standard_normal(n, dtype=np.float32))},
+        Layout.SOA)
+    ms = time_fn(lambda r: saxpy_record(r, 2.0, use_pallas=False).data, rec)
+    _row(csv, "saxpy_record", n, ms, 2 * rec.data.nbytes, peak)
+
+    # -- particle motion ----------------------------------------------------
+    from repro.kernels.particle.ops import PARTICLE_SPEC, particle_update
+
+    prec = RecordArray.from_fields(
+        PARTICLE_SPEC,
+        {"x": jnp.asarray(
+            rng.standard_normal((particle_n, 3), dtype=np.float32)),
+         "v": jnp.asarray(
+             rng.standard_normal((particle_n, 3), dtype=np.float32))},
+        Layout.SOA)
+    ms = time_fn(lambda r: particle_update(r, 0.25, use_pallas=False).data,
+                 prec)
+    _row(csv, "particle", particle_n, ms, 2 * prec.data.nbytes, peak)
+
+    # -- stencil (FORCE flux over the Euler record) -------------------------
+    from repro.core import Boundary, pad_boundary_only
+    from repro.kernels.stencil.ops import flux_difference
+    from repro.physics.euler import EULER_SPEC, shock_bubble_init
+
+    d = shock_bubble_init(*flux_shape)
+    for ax in (1, 2):
+        d = pad_boundary_only(d, axis=ax, width=1,
+                              boundary=Boundary.TRANSMISSIVE)
+    frec = RecordArray(d, EULER_SPEC, Layout.SOA)
+    ms = time_fn(lambda r: flux_difference(r, 0.1, 0.1).data, frec)
+    interior = frec.data.nbytes * math.prod(flux_shape) / \
+        math.prod(s + 2 for s in flux_shape)
+    _row(csv, "flux", f"{flux_shape[0]}x{flux_shape[1]}", ms,
+         int(frec.data.nbytes + interior), peak)
+
+    rows = csv.dicts()
+    assert peak > 0, "copy-peak measurement failed"
+    assert all(float(r["achieved_gbps"]) > 0 for r in rows), rows
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"copy_peak_gbps": peak,
+                       "ref_hbm_gbps": HBM_BW / 1e9,
+                       "rows": rows, "unix_time": time.time()},
+                      fh, indent=2)
+        print(f"[roofline] wrote {json_path}")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--n", type=int, default=1 << 20)
+    args = ap.parse_args()
+    try:
+        main(n=args.n, json_path=args.json)
+    except AssertionError as exc:
+        print(f"[roofline] FAILED: {exc}", file=sys.stderr)
+        sys.exit(1)

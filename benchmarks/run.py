@@ -22,14 +22,18 @@ def main(argv=None) -> int:
                     help="write per-suite timings/rows as JSON")
     args = ap.parse_args(argv)
 
-    from . import (dispatch_overhead, fig13_scaling, serve_load,
-                   table2_saxpy, table3_particle, table4_flux,
-                   table5_eikonal, table_layout, table_tuned)
+    from . import (dispatch_overhead, fig13_scaling, overlap_gain,
+                   roofline, serve_load, table2_saxpy, table3_particle,
+                   table4_flux, table5_eikonal, table_layout, table_tuned)
     jobs = [
         ("Dispatch overhead (region compiler vs per-segment)",
          lambda: dispatch_overhead.main(
              steps=30 if not args.full else 100,
              n=4096 if not args.full else 1 << 20)),
+        ("Async overlap gain (event-driven host callbacks)",
+         overlap_gain.main),
+        ("Roofline (achieved vs peak GB/s)", lambda: roofline.main(
+            n=1 << 20 if not args.full else 1 << 24)),
         ("Serving load (continuous batching)",
          lambda: serve_load.main(
              slots=2, n_requests=6, prompt_len=10, gen=8,

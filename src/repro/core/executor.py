@@ -46,7 +46,22 @@ decisions* (DESIGN.md §2/§4), which this executor makes explicitly:
 * ``exclusive_padded_access`` captures the pre-update halo first and
   threads it as a data dependency (paper Fig. 9's extra edges);
 * host (Cpu) nodes and ``sync()`` break segments — the host work runs
-  between jit calls (heterogeneous execution);
+  between jit calls (heterogeneous execution).  By default the region
+  loop is **event-driven** (``async_regions=True``): device regions are
+  dispatched without blocking (JAX dispatch is already asynchronous),
+  host callbacks run on a shared ``ThreadPoolExecutor`` as futures so
+  only true data dependents wait on them, and when donation is on each
+  callback reads a device-side snapshot of its arguments (double
+  buffering: step N+1's relayouts/halo sends may overwrite the donated
+  buffers while step N's callback still reads).  Barrier regions
+  (``sync()``, opaque callbacks) and ``host_loop`` regions drain the
+  in-flight callbacks first; ``run()``/``__call__`` drain before
+  returning, re-raising the FIRST callback exception in program order
+  and cancelling its successors.  ``Executor(async_regions=False)`` is
+  the synchronous escape hatch (bitwise-identical results);
+  ``core/schedule.py``'s ``region_dag``/``region_waves`` give regions —
+  not just nodes — explicit dependencies, rendered by
+  ``plan.describe()`` as ready waves;
 * a graph with ``conditional`` becomes a ``lax.while_loop`` (device) or a
   host do/while (if it contains host nodes); device loops trace straight
   into their enclosing region, host loops run a cached sub-``Executor``;
@@ -77,8 +92,10 @@ import functools
 import hashlib
 import math
 import sys
+import threading
 import types
 import warnings
+from concurrent.futures import ThreadPoolExecutor
 from contextlib import contextmanager
 from dataclasses import dataclass, field as dfield
 from functools import partial
@@ -174,6 +191,149 @@ def _shard_storage_shape(t: DistTensor,
     return RecordArray.storage_shape(t.spec, space, t.layout)
 
 
+# -- event-driven async region runtime ----------------------------------------
+
+class _HostTaskCancelled(Exception):
+    """Raised inside a pooled host task whose predecessor failed: the
+    task's callback never runs (cancellation cascades down the
+    host-order chain) and the drain skips it instead of reporting it."""
+
+
+_HOST_POOL: Optional[ThreadPoolExecutor] = None
+_HOST_POOL_LOCK = threading.Lock()
+
+
+def _host_pool() -> ThreadPoolExecutor:
+    """Process-wide pool for host-node callbacks (lazy singleton — one
+    pool for every Executor, so constructing many executors never leaks
+    threads).  Deadlock-free by construction: chained tasks only ever
+    wait on earlier-submitted tasks, and the pool consumes its queue
+    FIFO, so the earliest unfinished task always holds a worker."""
+    global _HOST_POOL
+    with _HOST_POOL_LOCK:
+        if _HOST_POOL is None:
+            _HOST_POOL = ThreadPoolExecutor(
+                max_workers=4, thread_name_prefix="ripple-host")
+        return _HOST_POOL
+
+
+def _snapshot_for_host(v):
+    """Device-side copy of one resolved host argument — the double
+    buffer under donation: the callback reads the snapshot while the
+    next region call donates (and XLA overwrites) the original buffer.
+    The copy itself is async-dispatched, so it rides the device stream
+    *before* the overwrite without blocking the dispatcher."""
+    if isinstance(v, RecordArray):
+        return RecordArray(jnp.copy(v.data), v.spec, v.layout)
+    if isinstance(v, jax.Array):
+        return jnp.copy(v)
+    return v
+
+
+def _host_arg_leaves(vals) -> list:
+    """The device arrays among resolved host args (what the pooled task
+    blocks on before invoking the callback)."""
+    leaves = []
+    for v in vals:
+        if isinstance(v, RecordArray):
+            leaves.append(v.data)
+        elif isinstance(v, jax.Array):
+            leaves.append(v)
+    return leaves
+
+
+class _AsyncRun:
+    """The in-flight host-callback futures of ONE ``run()``/``__call__``
+    epoch (the event-driven dispatcher's mutable state).
+
+    Each non-barrier host region is submitted to the shared pool instead
+    of blocking the dispatcher; the task first waits on the previous
+    host task (program order for side effects — the host-order edges of
+    the region DAG), then blocks on its own argument arrays (its only
+    true data dependency), then runs the callback.  ``donate=True``
+    snapshots the arguments at submit time so later donating region
+    calls cannot delete the buffers out from under a still-running
+    callback.  ``max_inflight`` bounds the pipeline depth."""
+
+    max_inflight = 32
+
+    def __init__(self, donate: bool):
+        self.donate = donate
+        self.tasks: list = []    # (region_index, Future), dispatch order
+        self._prev = None        # tail of the host-order chain
+
+    def submit(self, region_index: int, fn, vals) -> None:
+        self.check()
+        if len(self.tasks) >= self.max_inflight:
+            self._wait_oldest()
+        if self.donate:
+            vals = [_snapshot_for_host(v) for v in vals]
+        leaves = _host_arg_leaves(vals)
+        prev = self._prev
+
+        def task():
+            # Future.exception() blocks until prev completes — this IS
+            # the host-order chain; a failed predecessor cancels us
+            if prev is not None and prev.exception() is not None:
+                raise _HostTaskCancelled()
+            jax.block_until_ready(leaves)
+            if fn is not None:
+                fn(*vals)
+
+        fut = _host_pool().submit(task)
+        self._prev = fut
+        self.tasks.append((region_index, fut))
+
+    def _wait_oldest(self) -> None:
+        _, fut = self.tasks[0]
+        try:
+            fut.result()     # a real failure propagates to the dispatcher
+        except _HostTaskCancelled:
+            pass
+        self.tasks.pop(0)
+
+    def check(self) -> None:
+        """Surface an already-failed callback without waiting on the
+        rest — the dispatcher calls this before issuing each region so a
+        failure stops new work promptly."""
+        for _, fut in self.tasks:
+            if fut.done():
+                exc = fut.exception()
+                if exc is not None and \
+                        not isinstance(exc, _HostTaskCancelled):
+                    raise exc
+
+    def drain(self) -> None:
+        """Wait for every in-flight callback; re-raise the FIRST failure
+        in dispatch order (cancelled successors are skipped) — the
+        exception a synchronous run would have raised."""
+        first = None
+        for _, fut in self.tasks:
+            try:
+                fut.result()
+            except _HostTaskCancelled:
+                pass
+            except BaseException as exc:
+                if first is None:
+                    first = exc
+        self.tasks.clear()
+        self._prev = None
+        if first is not None:
+            raise first
+
+    def abort(self) -> None:
+        """Exception-path cleanup: wait out every in-flight callback
+        swallowing their errors (another exception is already flying) —
+        no orphaned tasks, no deadlock."""
+        for _, fut in self.tasks:
+            try:
+                fut.result()
+            except BaseException:
+                pass
+        self.tasks.clear()
+        self._prev = None
+
+
 # -- layout solver (paper §4.2 as a per-segment compiler pass) -----------------
 
 @dataclass(frozen=True)
@@ -242,10 +402,13 @@ class LayoutPlan:
     (``core/schedule.py``); :meth:`describe_dag` renders it together with
     the relayout steps and halo blocks hoisted to each segment entry.
     ``regions`` is the region compiler's grouping of segments into fused
-    executables, ``signature`` the plan-signature digest keying the
-    process-wide executable cache, and ``cache`` the live cache entry
-    (builds / reuse hits / trace events) — all rendered by
-    :meth:`describe_dag`.  ``tuning`` is the measured autotuner's
+    executables, ``region_edges`` the region-level dependency DAG the
+    event-driven dispatcher honors (``core/schedule.py``'s
+    :func:`~repro.core.schedule.region_dag`; :meth:`region_waves`
+    layers it into ready waves), ``signature`` the plan-signature
+    digest keying the process-wide executable cache, and ``cache`` the
+    live cache entry (builds / reuse hits / trace events) — all
+    rendered by :meth:`describe_dag`.  ``tuning`` is the measured autotuner's
     :class:`~repro.tuning.search.TuningDecision` when the Executor was
     constructed with ``tune="load"``/``"auto"`` (None when tuning is
     off); :meth:`describe_tuning` renders what was measured, what was
@@ -258,6 +421,8 @@ class LayoutPlan:
     overlap_fallbacks: list[OverlapFallback] = dfield(default_factory=list)
     dag: Optional[ScheduleDag] = None
     regions: list[Region] = dfield(default_factory=list)
+    region_edges: list["schedule_lib.RegionEdge"] = dfield(
+        default_factory=list)
     signature: str = ""
     cache: Optional["ExecutableCacheEntry"] = None
     tuning: Optional[Any] = None
@@ -266,6 +431,13 @@ class LayoutPlan:
         """The scheduled halo blocks entering one segment (see
         :class:`HaloTransfer`)."""
         return [h for h in self.halo_transfers if h.segment == segment]
+
+    def region_waves(self) -> list[list[int]]:
+        """Ready waves of region indices under the region-level DAG —
+        regions sharing a wave have no dependency path between them, so
+        the event-driven runtime may overlap them (also rendered by
+        :meth:`describe_dag` as the "region ready waves" block)."""
+        return schedule_lib.region_waves(self.regions, self.region_edges)
 
     def describe_dag(self) -> str:
         """Render the dependency DAG with its segment/wave placement,
@@ -859,6 +1031,7 @@ class Executor:
                  donate: bool = True,
                  layout_overrides: Optional[dict[str, Layout]] = None,
                  schedule: str = "dag", regions: bool = True,
+                 async_regions: bool = True,
                  tune: str = "off",
                  tile_overrides: Optional[dict[str, Any]] = None,
                  tune_inputs: Optional[dict[str, Any]] = None):
@@ -873,6 +1046,11 @@ class Executor:
         self.donate = donate
         self.schedule = schedule
         self.regions_enabled = bool(regions)
+        # event-driven region dispatch (host callbacks on the pool, no
+        # inter-region block_until_ready); False = synchronous escape
+        # hatch with bitwise-identical results.  Not part of the plan
+        # signature: both modes run the SAME cached executables.
+        self.async_regions = bool(async_regions)
         self.tune = tune
         self.tensors = graph.all_tensors()
         self.results = graph.all_results()
@@ -928,6 +1106,13 @@ class Executor:
         self._regions = schedule_lib.group_regions(
             [k for k, _ in self._segments])
         self.plan.regions = self._regions
+        # region-level DAG: lifted from the unit edges so regions — not
+        # just nodes — carry explicit dependencies; the async dispatcher
+        # uses the per-region barrier bit, describe() the ready waves
+        self.plan.region_edges = schedule_lib.region_dag(self.dag,
+                                                         self._regions)
+        self._region_access = schedule_lib.region_access(self.dag,
+                                                         self._regions)
         self._plan_sig = plan_signature(self)
         self.plan.signature = hashlib.sha1(
             repr(self._plan_sig).encode()).hexdigest()[:12]
@@ -1402,6 +1587,7 @@ class Executor:
                 payload, self.mesh, donate=False,
                 layout_overrides=self.plan.per_segment[i],
                 schedule=self.schedule, regions=self.regions_enabled,
+                async_regions=self.async_regions,
                 tile_overrides=self._tile_config)
         return sub
 
@@ -1601,23 +1787,55 @@ class Executor:
         finally:
             self._state_layouts = dict(self.plan.initial)
 
+    def _async_ctx(self) -> Optional[_AsyncRun]:
+        """A fresh dispatcher context when the event-driven runtime is
+        active (async on, region path, and a host region exists to
+        overlap) — None means the pass runs exactly as before."""
+        if not (self.async_regions and self.regions_enabled):
+            return None
+        if not any(r.kind == "host" for r in self._regions):
+            return None
+        return _AsyncRun(self.donate)
+
     def __call__(self, state: dict) -> dict:
         with self._layout_epoch():
-            state = self._pass_once(dict(state))
-            return self._restore_initial_layouts(dict(state))
+            ctx = self._async_ctx()
+            try:
+                state = self._pass_once(dict(state), ctx)
+                state = self._restore_initial_layouts(dict(state))
+                if ctx is not None:
+                    ctx.drain()
+                return state
+            except BaseException:
+                if ctx is not None:
+                    ctx.abort()
+                raise
 
-    def _pass_once(self, state: dict) -> dict:
+    def _pass_once(self, state: dict,
+                   ctx: Optional[_AsyncRun] = None) -> dict:
         if self.regions_enabled:
-            return self._run_regions_once(state)
+            return self._run_regions_once(state, ctx)
         return self._call_segments(state)
 
-    def _run_regions_once(self, state: dict) -> dict:
+    def _run_regions_once(self, state: dict,
+                          ctx: Optional[_AsyncRun] = None) -> dict:
         """One pass over the region schedule: each device region is ONE
         cached executable call (its relayouts and halo glue run inside
         the trace); host work runs eagerly between regions.  Layout
         bookkeeping is runtime-driven, so repeated passes re-dispatch
-        nothing when consecutive iterations agree on layout."""
+        nothing when consecutive iterations agree on layout.
+
+        With a dispatcher context (``async_regions=True``) the pass is
+        event-driven: device regions are issued without any
+        ``block_until_ready`` (the device stream serializes them through
+        their data dependencies), non-barrier host regions become pooled
+        futures that block only on their OWN argument arrays, and only
+        barrier/host_loop regions drain the in-flight callbacks.
+        Device dispatch order is program order either way, so results
+        are bitwise identical to the synchronous path."""
         for region in self._regions:
+            if ctx is not None:
+                ctx.check()
             if region.kind == "device":
                 fn, exit_layouts = self._region_executable(region)
                 state = fn(state)
@@ -1626,6 +1844,15 @@ class Executor:
                 si = region.start
                 state = self._apply_segment_layouts(dict(state), si)
                 node: Node = self._segments[si][1]
+                barrier = self._region_access[region.index][2]
+                if ctx is not None and not barrier:
+                    vals = self._resolve_args(
+                        node, state, False, self._state_layouts) \
+                        if node.args else []
+                    ctx.submit(region.index, node.fn, vals)
+                    continue
+                if ctx is not None:
+                    ctx.drain()   # barrier: side-effect order vs pool
                 jax.block_until_ready(jax.tree_util.tree_leaves(state))
                 if node.fn is not None:
                     vals = self._resolve_args(
@@ -1635,6 +1862,8 @@ class Executor:
             else:  # host_loop
                 si = region.start
                 state = self._apply_segment_layouts(dict(state), si)
+                if ctx is not None:
+                    ctx.drain()   # the sub-executor writes state eagerly
                 sub_graph: Graph = self._segments[si][1]
                 sub = self._sub_executor(si)
                 # while semantics: check before the first iteration too
@@ -1694,10 +1923,21 @@ class Executor:
                 and self.dag.device_only:
             return self._run_fused(state, steps)
         with self._layout_epoch():
+            ctx = self._async_ctx()
             state = dict(state)
-            for _ in range(steps):
-                state = self._pass_once(dict(state))
-            return self._restore_initial_layouts(dict(state))
+            try:
+                for _ in range(steps):
+                    state = self._pass_once(dict(state), ctx)
+                state = self._restore_initial_layouts(dict(state))
+                if ctx is not None:
+                    # completion point of the epoch: every pooled host
+                    # callback has run (or its failure re-raises here)
+                    ctx.drain()
+                return state
+            except BaseException:
+                if ctx is not None:
+                    ctx.abort()
+                raise
 
     def _build_fused_fn(self, entry_layouts: dict[str, Layout]) -> Callable:
         """Device-only fast path executable: entry relayouts traced up

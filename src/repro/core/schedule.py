@@ -54,12 +54,16 @@ __all__ = [
     "DagUnit",
     "DagEdge",
     "Region",
+    "RegionEdge",
     "ScheduleDag",
     "node_access",
     "graph_access",
     "build_dag",
     "dag_segments",
     "group_regions",
+    "region_access",
+    "region_dag",
+    "region_waves",
     "sequential_segments",
     "place_units",
 ]
@@ -285,6 +289,24 @@ class ScheduleDag:
             if getattr(plan, "regions", None):
                 lines.append("regions (fused executables):")
                 lines.extend("  " + r.describe() for r in plan.regions)
+                redges = getattr(plan, "region_edges", None)
+                if redges is not None:
+                    by_idx = {r.index: r for r in plan.regions}
+                    lines.append("region ready waves (async dispatch "
+                                 "order):")
+                    for wi, wave in enumerate(
+                            region_waves(plan.regions, redges)):
+                        tag = (f" [x{len(wave)} overlappable]"
+                               if len(wave) >= 2 else "")
+                        lines.append(
+                            f"  wave {wi}{tag}: " + ", ".join(
+                                f"region {i} ({by_idx[i].kind})"
+                                for i in wave))
+                    for e in redges:
+                        via = f" via {e.key}" if e.key else ""
+                        lines.append(
+                            f"  region {e.src} -> region {e.dst} "
+                            f"({e.reason}{via})")
             if getattr(plan, "signature", ""):
                 cache = getattr(plan, "cache", None)
                 line = f"plan signature {plan.signature}"
@@ -512,6 +534,109 @@ def group_regions(segment_kinds: list[str]) -> list[Region]:
             regions.append(Region(len(regions), segment_kinds[i], i, i + 1))
             i += 1
     return regions
+
+
+@dataclass(frozen=True)
+class RegionEdge:
+    """A scheduling constraint between two regions (by region index).
+
+    Lifted from the unit-level :class:`DagEdge` s: a region edge exists
+    wherever any unit placed in ``src`` constrains any unit placed in
+    ``dst``.  ``reason`` keeps the strongest lifted reason (data reasons
+    beat ordering reasons) and ``key`` the state entry carrying it, so
+    ``plan.describe()`` can explain WHY the async dispatcher must wait.
+    Regions without an edge (direct or transitive) are independent: the
+    event-driven runtime may have both in flight at once.
+    """
+
+    src: int
+    dst: int
+    reason: str
+    key: Optional[str] = None
+
+
+# when several unit edges lift onto one region edge, keep the most
+# informative reason: true data dependencies beat ordering constraints
+_REGION_REASON_RANK = {"raw": 0, "waw": 1, "war": 2,
+                       "barrier": 3, "host-order": 4}
+
+
+def _segment_to_region(regions: list[Region]) -> dict[int, int]:
+    return {s: r.index for r in regions for s in r.segments}
+
+
+def region_access(dag: ScheduleDag,
+                  regions: list[Region]) -> dict[int, tuple]:
+    """Per-region footprint: ``index -> (reads, writes, barrier)``.
+
+    The union of the member units' footprints (the same sets
+    :func:`build_dag` derived), plus whether any member is a barrier —
+    a barrier region (``sync()``, opaque host callback) forces the async
+    dispatcher to drain every in-flight callback before it runs."""
+    seg2r = _segment_to_region(regions)
+    acc: dict[int, list] = {r.index: [set(), set(), False] for r in regions}
+    for u in dag.units:
+        ri = seg2r.get(u.segment)
+        if ri is None:
+            continue
+        acc[ri][0] |= u.reads
+        acc[ri][1] |= u.writes
+        acc[ri][2] = acc[ri][2] or u.barrier
+    return {i: (frozenset(r), frozenset(w), b)
+            for i, (r, w, b) in acc.items()}
+
+
+def region_dag(dag: ScheduleDag,
+               regions: list[Region]) -> list[RegionEdge]:
+    """Lift the unit-level dependency edges to the region level.
+
+    Every :class:`DagEdge` whose endpoints landed in different regions
+    becomes (after dedup) one :class:`RegionEdge` — so the region DAG
+    inherits exactly the RAW/WAW/WAR/barrier/host-order analysis that
+    :func:`build_dag` already performed, rather than recomputing
+    footprints.  Units are placed before this is called (via
+    :func:`dag_segments` or :func:`place_units`); edges between units of
+    one region vanish (they are honored inside the fused executable)."""
+    seg2r = _segment_to_region(regions)
+    best: dict[tuple[int, int], RegionEdge] = {}
+    for e in dag.edges:
+        rs = seg2r.get(dag.units[e.src].segment)
+        rd = seg2r.get(dag.units[e.dst].segment)
+        if rs is None or rd is None or rs == rd:
+            continue
+        if rs > rd:          # unit edges point forward; defensive only
+            rs, rd = rd, rs
+        cur = best.get((rs, rd))
+        if cur is None or (_REGION_REASON_RANK[e.reason]
+                           < _REGION_REASON_RANK[cur.reason]):
+            best[(rs, rd)] = RegionEdge(rs, rd, e.reason, e.key)
+    return [best[k] for k in sorted(best)]
+
+
+def region_waves(regions: list[Region],
+                 edges: list[RegionEdge]) -> list[list[int]]:
+    """Kahn layering of the region DAG into ready waves.
+
+    Wave ``k`` holds every region whose predecessors all sit in earlier
+    waves — the ready-set order the async dispatcher walks, and the
+    "ready waves of regions" view ``plan.describe()`` renders.  Two
+    regions sharing a wave have no dependency path between them: the
+    runtime may overlap them (e.g. a host callback runs on the pool
+    while the next device region is already dispatched)."""
+    preds: dict[int, set[int]] = {r.index: set() for r in regions}
+    for e in edges:
+        preds[e.dst].add(e.src)
+    done: set[int] = set()
+    pending = [r.index for r in regions]
+    waves: list[list[int]] = []
+    while pending:
+        ready = [i for i in pending if preds[i] <= done]
+        if not ready:        # unreachable (edges point forward); safety
+            ready = [pending[0]]
+        waves.append(ready)
+        done.update(ready)
+        pending = [i for i in pending if i not in done]
+    return waves
 
 
 def sequential_segments(graph: Graph) -> list[tuple]:

@@ -89,12 +89,24 @@ class Batcher:
     ``Batcher`` in a worker that reuses the same ``cfg``/``params`` objects
     serves straight from the process-wide executable cache with zero new
     traces (asserted in CI via ``cache_stats()["trace_events"]``).
+
+    Admission overlaps decode (``prefill_ahead=True``): the decode call
+    returns at dispatch (the executor's event-driven runtime), and the
+    queue head's prefills are dispatched BEHIND the in-flight step on
+    the device stream before the batcher blocks for the step's tokens —
+    so a new request's prefill costs wall time only where it exceeds
+    the decode step it hid behind.  Token results are unchanged:
+    prefill is a pure function of the prompt, and recovery replays
+    (prompt + generated) never reuse a prepared prefill.
+    ``StepStats`` records completion times (measured after
+    ``block_until_ready``), with dispatch-return tracked separately.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, batch: int,
                  max_seq: int, mesh=None, eos_token: Optional[int] = None,
                  max_failures: int = 10, max_retries_per_step: int = 3,
                  straggler_zscore: float = 3.0,
+                 prefill_ahead: bool = True,
                  executor_opts: Optional[dict] = None,
                  step_hook: Optional[Callable[[int], None]] = None,
                  log: Callable[[str], None] = print):
@@ -123,6 +135,10 @@ class Batcher:
         self.failures = 0
         self._next_rid = 0
         self._prefill: dict = {}          # prompt_len -> (PrefillGraph, Executor)
+        # admit-while-in-flight: prefills computed behind a dispatched
+        # decode step, keyed by request id, consumed at admission
+        self.prefill_ahead = bool(prefill_ahead)
+        self._prepared: dict = {}         # rid -> (PrefillGraph, Executor, state)
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 64) -> Request:
@@ -143,6 +159,7 @@ class Batcher:
         for req in list(self.queue):
             if req.rid == rid:
                 self.queue.remove(req)
+                self._prepared.pop(rid, None)
                 req.status = "evicted"
                 self.retired.append(req)
                 return True
@@ -176,12 +193,32 @@ class Batcher:
             if self.slots[slot] is None:
                 self._admit(self.queue.popleft(), slot)
 
+    def _prefill_state(self, prompt: np.ndarray):
+        pg, exp = self._prefill_for(len(prompt))
+        pst = exp.init_state(prompt=jnp.asarray(prompt, jnp.int32)[None])
+        return pg, exp, exp(pst)
+
+    def _prefill_ahead(self) -> None:
+        """Compute prefills for the queue head while a decode step is in
+        flight (the decode dispatch already returned; these prefill
+        programs queue up behind it on the device stream, so admission
+        work overlaps the step instead of serializing after it).
+        Results are consumed by :meth:`_admit`; recovery replays
+        (``req.generated`` non-empty) never use them — their prefill
+        must include the generated tokens."""
+        for req in list(self.queue)[:self.batch]:
+            if req.generated or req.rid in self._prepared:
+                continue
+            self._prepared[req.rid] = self._prefill_state(req.prompt)
+
     def _admit(self, req: Request, slot: int) -> None:
         prompt = np.concatenate([req.prompt,
                                  np.asarray(req.generated[:-1], np.int32)])
-        pg, exp = self._prefill_for(len(prompt))
-        pst = exp.init_state(prompt=jnp.asarray(prompt, jnp.int32)[None])
-        pst = exp(pst)
+        prepared = self._prepared.pop(req.rid, None)
+        if prepared is not None and not req.generated:
+            pg, exp, pst = prepared
+        else:
+            pg, exp, pst = self._prefill_state(prompt)
         if req.generated:
             # recovery replay: the last generated token is the next input
             first = int(req.generated[-1])
@@ -252,10 +289,19 @@ class Batcher:
                 if self.step_hook is not None:
                     self.step_hook(self.steps)
                 self.state = self.executor(self.state)
+                t_dispatch = time.perf_counter() - t0
+                # decode step in flight (async dispatch): admit-ahead —
+                # prefill queued requests behind it on the device stream
+                if self.prefill_ahead:
+                    self._prefill_ahead()
+                # StepStats contract: dt is COMPLETION time, measured
+                # after block_until_ready (the async executor's call
+                # above returned at dispatch)
                 jax.block_until_ready(self.state["tokens"])
                 dt = time.perf_counter() - t0
                 if self.stats.update(dt, self.steps,
-                                     self.straggler_zscore):
+                                     self.straggler_zscore,
+                                     dispatch=t_dispatch):
                     self.log(f"[batcher] straggler step {self.steps}: "
                              f"{dt * 1e3:.1f}ms "
                              f"(mean {self.stats.mean * 1e3:.1f})")

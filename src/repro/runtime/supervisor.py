@@ -41,19 +41,42 @@ class TransientError(RuntimeError):
 
 @dataclass
 class StepStats:
+    """Welford tracker of per-step COMPLETION wall time.
+
+    Under the event-driven executor (``async_regions=True``) a step
+    function RETURNS at dispatch — the device is still computing and
+    host callbacks are still in flight — so timing the call alone would
+    report near-zero latency and blind the straggler detector.  The
+    contract is therefore: ``dt`` passed to :meth:`update` must be
+    measured after ``jax.block_until_ready`` on the step's outputs
+    (completion), and the dispatch-return time may be passed separately
+    as ``dispatch=`` — ``dispatch_mean``/``last_dispatch`` then expose
+    how much of each step the runtime successfully overlapped
+    (completion − dispatch ≈ the work hidden behind the host)."""
+
     count: int = 0
     mean: float = 0.0
     m2: float = 0.0
     last: float = 0.0
+    last_dispatch: float = 0.0
+    dispatch_mean: float = 0.0
     stragglers: list = field(default_factory=list)
 
-    def update(self, dt: float, step: int, zscore: float = 3.0) -> bool:
-        """Welford update; returns True if this step was a straggler."""
+    def update(self, dt: float, step: int, zscore: float = 3.0,
+               dispatch: Optional[float] = None) -> bool:
+        """Welford update with a completion time ``dt``; returns True if
+        this step was a straggler.  ``dispatch`` (optional) is the
+        dispatch-return time of the same step, tracked separately —
+        stragglers are always judged on completion."""
         self.last = dt
         self.count += 1
         d = dt - self.mean
         self.mean += d / self.count
         self.m2 += d * (dt - self.mean)
+        if dispatch is not None:
+            self.last_dispatch = dispatch
+            self.dispatch_mean += (dispatch - self.dispatch_mean) \
+                / self.count
         if self.count >= 8:
             std = math.sqrt(self.m2 / (self.count - 1))
             if std > 0 and dt > self.mean + zscore * std:
@@ -64,6 +87,15 @@ class StepStats:
     @property
     def std(self) -> float:
         return math.sqrt(self.m2 / max(self.count - 1, 1))
+
+    @property
+    def overlap_ms(self) -> float:
+        """Mean milliseconds per step hidden behind asynchronous
+        dispatch (completion mean − dispatch mean; 0 when dispatch was
+        never reported)."""
+        if self.dispatch_mean <= 0.0:
+            return 0.0
+        return max(self.mean - self.dispatch_mean, 0.0) * 1e3
 
 
 @dataclass
@@ -93,9 +125,13 @@ class Supervisor:
             try:
                 t0 = time.perf_counter()
                 state = self.step_fn(state, batch_at(step))
+                # the async executor returns at dispatch; straggler
+                # detection must see COMPLETION time (StepStats contract)
+                t_dispatch = time.perf_counter() - t0
                 jax.block_until_ready(jax.tree.leaves(state))
                 dt = time.perf_counter() - t0
-                if self.stats.update(dt, step, self.straggler_zscore):
+                if self.stats.update(dt, step, self.straggler_zscore,
+                                     dispatch=t_dispatch):
                     self.log(f"[supervisor] straggler step {step}: "
                              f"{dt*1e3:.1f}ms (mean {self.stats.mean*1e3:.1f})")
                 retries = 0

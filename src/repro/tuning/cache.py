@@ -2,10 +2,13 @@
 
 One JSON file per tuning key under ``$REPRO_TUNE_CACHE`` (or
 ``~/.cache/repro-tune``).  The key is derived from the *heuristic* plan
-signature × device kind × jax version (``repro.tuning.search``), so a
-second process constructing an ``Executor`` over an identical graph on
-the same hardware (the serving pattern) loads the tuned configuration
-with zero re-measurement.
+signature × the full device assortment (:func:`device_assortment`:
+kinds × counts × process count) × jax version
+(``repro.tuning.search``), so a second process constructing an
+``Executor`` over an identical graph on the same hardware (the serving
+pattern) loads the tuned configuration with zero re-measurement — and a
+process on DIFFERENT hardware (more devices, another kind, multi-host)
+misses instead of inheriting a wrong decision.
 
 Robustness contract:
 
@@ -28,8 +31,8 @@ import warnings
 from pathlib import Path
 from typing import Any, Optional
 
-__all__ = ["SCHEMA_VERSION", "cache_dir", "cache_path", "load", "store",
-           "clear_memo"]
+__all__ = ["SCHEMA_VERSION", "cache_dir", "cache_path", "device_assortment",
+           "load", "store", "clear_memo"]
 
 SCHEMA_VERSION = 1
 
@@ -52,6 +55,30 @@ def cache_dir() -> Path:
 def cache_path(key: str) -> Path:
     """The JSON file holding the tuned decision for ``key``."""
     return cache_dir() / f"{key}.json"
+
+
+def device_assortment() -> tuple:
+    """The runtime's FULL device complement as a hashable key: sorted
+    ``(platform, device_kind, count)`` triples over ``jax.devices()``
+    plus the process count.
+
+    Tuning measurements are only transferable between identical
+    assortments — a decision measured on 1×cpu must not hit for 8×cpu
+    (different sharding, different collectives), nor a single-host
+    measurement for a multi-host mesh.  Keying by ``devices()[0]``
+    alone conflated all of those; ``tuning_key`` hashes this instead."""
+    import jax
+
+    counts: dict[tuple[str, str], int] = {}
+    for d in jax.devices():
+        k = (d.platform, str(getattr(d, "device_kind", "")))
+        counts[k] = counts.get(k, 0) + 1
+    try:
+        procs = int(jax.process_count())
+    except Exception:   # very old jax: single-process by definition
+        procs = 1
+    return (tuple(sorted((p, kind, n) for (p, kind), n in counts.items())),
+            procs)
 
 
 def _validate(payload: Any, key: str) -> dict:

@@ -138,14 +138,16 @@ class TuningDecision:
 
 def tuning_key(executor) -> str:
     """The persistent-cache key of an executor's plan: heuristic plan
-    signature × device kind × jax version.  Stable across processes for
+    signature × the full device assortment (kinds × counts × process
+    count — ``cache.device_assortment``, NOT just ``devices()[0]``, so
+    heterogeneous or multi-host meshes never reuse a measurement taken
+    on different hardware) × jax version.  Stable across processes for
     graphs whose node functions the plan signature can key structurally
     (plain functions / closures over provable values)."""
     import jax
 
-    dev = jax.devices()[0]
-    raw = repr(("repro-tune-v1", executor.plan.signature, dev.platform,
-                getattr(dev, "device_kind", ""), jax.__version__))
+    raw = repr(("repro-tune-v2", executor.plan.signature,
+                cache_lib.device_assortment(), jax.__version__))
     return hashlib.sha1(raw.encode()).hexdigest()[:16]
 
 
@@ -228,6 +230,7 @@ def measure_plan(executor, key: str) -> TuningDecision:
                                         **layouts},
                       schedule=executor.schedule,
                       regions=executor.regions_enabled,
+                      async_regions=executor.async_regions,
                       tile_overrides=tile_cfg)
         candidate_sigs.append(ex._plan_sig)
         state = ex.init_state(**executor._tune_inputs)

@@ -16,13 +16,21 @@ import random
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Boundary, DistTensor, Graph, Layout, MaxReducer,
-                        RecordArray, RecordSpec, SumReducer,
+from repro.core import (Boundary, DistTensor, ExecutionKind, Graph, Layout,
+                        MaxReducer, RecordArray, RecordSpec, SumReducer,
                         concurrent_padded_access, make_reduction_result)
 
 SPEC = RecordSpec.create("x", "y")
 NX, NY = 16, 12
 N_SCALARS = 3
+
+
+def _host_noop(x):
+    """Host-callback body for generated graphs: a REAL host-side read
+    (numpy materialization) with no side effects, so injecting it can
+    never change values — only scheduling.  Module-level so every graph
+    built from the same seed has an identical plan signature."""
+    np.asarray(x)
 
 
 def make_tensors(layout: Layout, partition=()):
@@ -42,9 +50,17 @@ def _stencil(s, _d):
             - 3.5 * s[1:-1, 1:-1])
 
 
-def build_random_graph(seed: int, layout: Layout, partition=()):
+def build_random_graph(seed: int, layout: Layout, partition=(), *,
+                       host_callbacks: bool = False):
     """A 2-4 level graph, 1-3 nodes per level, drawn from the pool
     {scalar saxpy, 2-d stencil, reduce, record saxpy, result broadcast}.
+
+    With ``host_callbacks=True`` each level also injects, with 50%
+    probability, a side-effect-free host read of a random scalar tensor
+    (``exec_kind=Cpu``) — the async-runtime property tests exercise the
+    event-driven dispatcher on exactly these graphs.  The extra draws
+    happen only when enabled, so ``host_callbacks=False`` graphs are
+    bit-identical to what this generator always produced for a seed.
 
     Returns ``(graph, overrides, state_keys)``: pass ``overrides`` to
     ``Executor.init_state`` (fresh arrays each call — donation-safe) and
@@ -58,6 +74,9 @@ def build_random_graph(seed: int, layout: Layout, partition=()):
     for li in range(rng.randint(2, 4)):
         if li:
             g._new_level()
+        if host_callbacks and rng.random() < 0.5:
+            g.then(_host_noop, exec_kind=ExecutionKind.Cpu,
+                   args=(scalars[rng.randrange(N_SCALARS)],))
         for _ in range(rng.randint(1, 3)):
             kind = rng.choice(
                 ["saxpy", "stencil", "reduce", "rec", "result_add"])

@@ -1,0 +1,296 @@
+"""Event-driven async region runtime (core/executor.py, core/schedule.py):
+region-level DAG structure, the property-tested async == sync bitwise
+equivalence, host-callback semantics under the pooled dispatcher
+(threading, program order, donation snapshots, exception propagation),
+and completion-time StepStats (runtime/supervisor.py)."""
+
+import os
+import sys
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DistTensor, ExecutionKind, Executor, Graph, Layout,
+                        region_dag, region_waves)
+from repro.runtime.supervisor import StepStats
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _graph_gen import build_random_graph  # noqa: E402
+
+from conftest import run_subprocess_devices  # noqa: E402
+
+LAYOUTS = (Layout.AOS, Layout.SOA, Layout.AOSOA)
+
+
+def _cb_chain_graph(seen, tags=("a", "b")):
+    """device(write a) -> host(read a) -> device(write b) -> host(read b):
+    the minimal interleaved chain the dispatcher must keep in order."""
+    a = DistTensor("a", (8,))
+    b = DistTensor("b", (8,))
+    g = Graph(name="cbchain")
+    g.split(lambda x: x + 1.0, a, writes=(0,))
+    g.then((lambda t: lambda x: seen.append((t, float(np.asarray(x)[0]))))(
+        tags[0]), exec_kind=ExecutionKind.Cpu, args=(a,))
+    g.then_split(lambda x: x + 2.0, b, writes=(0,))
+    g.then((lambda t: lambda x: seen.append((t, float(np.asarray(x)[0]))))(
+        tags[1]), exec_kind=ExecutionKind.Cpu, args=(b,))
+    return g
+
+
+# -- region-level DAG structure ------------------------------------------------
+
+def test_region_dag_lifts_unit_edges_with_reasons():
+    seen = []
+    g = _cb_chain_graph(seen)
+    ex = Executor(g, donate=False)
+    edges = region_dag(ex.dag, ex.plan.regions)
+    assert edges == ex.plan.region_edges
+    pairs = {(e.src, e.dst): e.reason for e in edges}
+    # every edge points forward, and the host reads depend on the device
+    # writes that produce their arguments
+    assert all(s < d for s, d in pairs)
+    kinds = {r.index: r.kind for r in ex.plan.regions}
+    host_deps = [e for e in edges if kinds[e.dst] == "host"
+                 and kinds[e.src] == "device" and e.reason == "raw"]
+    assert host_deps, edges
+
+
+def test_region_waves_layer_by_dependencies():
+    seen = []
+    g = _cb_chain_graph(seen)
+    ex = Executor(g, donate=False)
+    waves = region_waves(ex.plan.regions, ex.plan.region_edges)
+    assert waves == ex.plan.region_waves()
+    placed = [i for w in waves for i in w]
+    assert sorted(placed) == [r.index for r in ex.plan.regions]
+    pos = {i: wi for wi, w in enumerate(waves) for i in w}
+    for e in ex.plan.region_edges:
+        assert pos[e.src] < pos[e.dst], e
+
+
+def test_describe_lists_region_ready_waves():
+    seen = []
+    g = _cb_chain_graph(seen)
+    ex = Executor(g, donate=False)
+    out = ex.describe_dag()
+    assert "region ready waves (async dispatch order):" in out
+    assert "wave 0" in out
+    assert "region 0" in out and "->" in out
+
+
+# -- dispatcher behavior -------------------------------------------------------
+
+def test_async_host_callbacks_run_on_pool_thread():
+    threads = []
+    a = DistTensor("a", (8,))
+    g = Graph(name="thr")
+    g.split(lambda x: x + 1.0, a, writes=(0,))
+    g.then(lambda x: threads.append(threading.current_thread().name),
+           exec_kind=ExecutionKind.Cpu, args=(a,))
+    ex = Executor(g, donate=False, async_regions=True)
+    ex(ex.init_state())
+    assert threads and all(t.startswith("ripple-host") for t in threads)
+
+
+def test_sync_escape_hatch_runs_on_main_thread():
+    threads = []
+    a = DistTensor("a", (8,))
+    g = Graph(name="thr2")
+    g.split(lambda x: x + 1.0, a, writes=(0,))
+    g.then(lambda x: threads.append(threading.current_thread().name),
+           exec_kind=ExecutionKind.Cpu, args=(a,))
+    ex = Executor(g, donate=False, async_regions=False)
+    ex(ex.init_state())
+    assert threads == ["MainThread"]
+
+
+def test_async_host_callbacks_preserve_program_order():
+    """Side-effect order is part of the contract: pooled callbacks are
+    chained, so two data-independent callbacks still fire in program
+    order, across repeated steps."""
+    seen = []
+    g = _cb_chain_graph(seen)
+    ex = Executor(g, donate=False, async_regions=True)
+    ex.run(ex.init_state(), 3)
+    assert seen == [("a", 1.0), ("b", 2.0), ("a", 2.0), ("b", 4.0),
+                    ("a", 3.0), ("b", 6.0)]
+
+
+def test_async_values_match_sync_per_step():
+    """The callback must observe the value at its program point of the
+    CURRENT step even while later steps are already dispatched."""
+    for mode in (False, True):
+        x = DistTensor("x", (8,))
+        seen = []
+        g = Graph(name="vals")
+        g.split(lambda v: v + 1.0, x, writes=(0,))
+        g.then(lambda v: seen.append(float(np.asarray(v)[0])),
+               exec_kind=ExecutionKind.Cpu, args=(x,))
+        g.then_split(lambda v: v * 2.0, x, writes=(0,))
+        ex = Executor(g, donate=False, async_regions=mode)
+        st = ex.run(ex.init_state(), 3)
+        assert seen == [1.0, 3.0, 7.0], f"async_regions={mode}"
+        np.testing.assert_array_equal(np.asarray(st["x"]), np.full(8, 14.0))
+
+
+def test_async_donation_snapshots_host_args():
+    """With donate=True the next region's executable overwrites the
+    argument buffers in place — the dispatcher must snapshot host args at
+    submit time so an in-flight callback reads the pre-overwrite value."""
+    x = DistTensor("x", (1 << 16,))   # big enough to really be donated
+    seen = []
+    g = Graph(name="donated")
+    g.split(lambda v: v + 1.0, x, writes=(0,))
+    g.then(lambda v: seen.append(float(np.asarray(v)[0])),
+           exec_kind=ExecutionKind.Cpu, args=(x,))
+    g.then_split(lambda v: v * 2.0, x, writes=(0,))
+    ex = Executor(g, donate=True, async_regions=True)
+    ex.run(ex.init_state(), 4)
+    assert seen == [1.0, 3.0, 7.0, 15.0]
+
+
+def test_async_callback_exception_propagates_and_cancels():
+    """A failing callback surfaces its ORIGINAL exception from the run,
+    later chained callbacks are cancelled (side-effect order: nothing
+    after a failure may fire), and nothing deadlocks."""
+    a = DistTensor("a", (8,))
+    seen = []
+
+    def boom(x):
+        raise ValueError("callback failed")
+
+    g = Graph(name="boom")
+    g.split(lambda x: x + 1.0, a, writes=(0,))
+    g.then(lambda x: seen.append("before"), exec_kind=ExecutionKind.Cpu,
+           args=(a,))
+    g.then(boom, exec_kind=ExecutionKind.Cpu, args=(a,))
+    g.then(lambda x: seen.append("after"), exec_kind=ExecutionKind.Cpu,
+           args=(a,))
+    ex = Executor(g, donate=False, async_regions=True)
+    with pytest.raises(ValueError, match="callback failed"):
+        ex(ex.init_state())
+    assert seen == ["before"]
+
+
+def test_async_executor_usable_after_callback_failure():
+    """The pool is process-wide: one failed epoch must not poison the
+    executor (or the pool) for later calls."""
+    a = DistTensor("a", (8,))
+    fail = [True]
+    ran = []
+
+    def maybe_boom(x):
+        if fail[0]:
+            raise RuntimeError("transient")
+        ran.append(float(np.asarray(x)[0]))
+
+    g = Graph(name="recover")
+    g.split(lambda x: x + 1.0, a, writes=(0,))
+    g.then(maybe_boom, exec_kind=ExecutionKind.Cpu, args=(a,))
+    ex = Executor(g, donate=False, async_regions=True)
+    with pytest.raises(RuntimeError, match="transient"):
+        ex(ex.init_state())
+    fail[0] = False
+    st = ex(ex.init_state())
+    assert ran == [1.0]
+    np.testing.assert_array_equal(np.asarray(st["a"]), np.full(8, 1.0))
+
+
+def test_async_flag_not_in_plan_signature():
+    """Both modes run the SAME cached executables — the flag must not
+    fork the process-wide executable cache."""
+    seen = []
+    g = _cb_chain_graph(seen)
+    ex_a = Executor(g, donate=False, async_regions=True)
+    ex_s = Executor(g, donate=False, async_regions=False)
+    assert ex_a.plan.signature == ex_s.plan.signature
+
+
+# -- property tests: async == sync, bitwise ------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), layout=st.sampled_from(list(LAYOUTS)),
+       donate=st.sampled_from([False, True]))
+def test_prop_async_equals_sync(seed, layout, donate):
+    """The acceptance bar: identical final state bitwise between the
+    event-driven dispatcher and the synchronous escape hatch, on random
+    graphs WITH host callbacks, across layouts and donation modes."""
+    g, overrides, keys = build_random_graph(seed, layout,
+                                            host_callbacks=True)
+    outs = {}
+    for mode in (True, False):
+        ex = Executor(g, donate=donate, async_regions=mode)
+        outs[mode] = ex.run(ex.init_state(**overrides()), 2)
+    for k in keys:
+        np.testing.assert_array_equal(
+            np.asarray(outs[True][k]), np.asarray(outs[False][k]),
+            err_msg=f"seed={seed} layout={layout} donate={donate} key={k}")
+
+
+# -- StepStats completion-time contract ----------------------------------------
+
+def test_stepstats_tracks_dispatch_separately():
+    s = StepStats()
+    for i in range(10):
+        s.update(0.1, i, dispatch=0.02)
+    assert s.mean == pytest.approx(0.1)
+    assert s.dispatch_mean == pytest.approx(0.02)
+    assert s.last_dispatch == pytest.approx(0.02)
+    assert s.overlap_ms == pytest.approx(80.0)
+
+
+def test_stepstats_overlap_zero_without_dispatch():
+    s = StepStats()
+    for i in range(5):
+        s.update(0.1, i)
+    assert s.overlap_ms == 0.0
+
+
+def test_stepstats_straggler_judged_on_completion():
+    """A step whose dispatch returned instantly but whose completion was
+    slow IS a straggler — async dispatch must not blind the detector."""
+    s = StepStats()
+    for i in range(20):
+        s.update(0.1 + 1e-4 * (i % 3), i, dispatch=0.001)
+    assert s.update(1.0, 20, dispatch=0.001) is True
+    assert s.stragglers and s.stragglers[-1][0] == 20
+
+
+# -- multi-device equivalence (slow lane) --------------------------------------
+
+_CHILD_ASYNC = r"""
+import sys
+sys.path.insert(0, {tests_dir!r})
+import numpy as np
+from repro.core import Executor, Layout, make_mesh
+from _graph_gen import build_random_graph
+
+mesh = make_mesh(({n},), ("gx",))
+for seed in range({seeds}):
+    for layout in (Layout.AOS, Layout.SOA, Layout.AOSOA):
+        g, overrides, keys = build_random_graph(seed, layout,
+                                                partition=("gx",),
+                                                host_callbacks=True)
+        outs = []
+        for mode in (True, False):
+            ex = Executor(g, mesh=mesh, donate=False, async_regions=mode)
+            outs.append(ex.run(ex.init_state(**overrides()), 2))
+        for k in keys:
+            np.testing.assert_array_equal(
+                np.asarray(outs[0][k]), np.asarray(outs[1][k]),
+                err_msg=f"seed={{seed}} layout={{layout}} key={{k}}")
+print("ASYNC-EQUIV-OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_devices,seeds", [(2, 6), (8, 4)])
+def test_async_equals_sync_multidevice(n_devices, seeds):
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    out = run_subprocess_devices(
+        _CHILD_ASYNC.format(tests_dir=tests_dir, n=n_devices, seeds=seeds),
+        n_devices=n_devices)
+    assert "ASYNC-EQUIV-OK" in out

@@ -107,6 +107,46 @@ def test_aosoa_decode_plan_identical_tokens(served):
         assert req.generated == ref, (req.rid, req.generated, ref)
 
 
+def test_prefill_ahead_identical_tokens_and_consumed(served):
+    """Admission overlap: prefills computed behind the dispatched decode
+    step are cached per-request and consumed at admission — tokens are
+    identical to the no-prefill-ahead path, and nothing leaks."""
+    cfg, params, prompts, want_n, refs, _ = served
+    for ahead in (False, True):
+        b = Batcher(cfg, params, batch=2, max_seq=MAX_SEQ,
+                    prefill_ahead=ahead)
+        reqs = [b.submit(p, max_new_tokens=n)
+                for p, n in zip(prompts, want_n)]
+        done = b.run()
+        assert len(done) == len(reqs)
+        for req, ref in zip(reqs, refs):
+            assert req.generated == ref, (ahead, req.rid)
+        assert b._prepared == {}     # every prepared prefill was consumed
+
+
+def test_prefill_ahead_never_reused_after_replay(served):
+    """Recovery safety: a request replayed after a TransientError has
+    generated tokens — its cached fresh-prompt prefill must NOT be
+    reused (the replay re-prefills prompt + generated)."""
+    cfg, params, prompts, want_n, refs, _ = served
+    boom = {"at": 2}
+
+    def hook(step):
+        if step == boom["at"]:
+            boom["at"] = -1
+            raise TransientError("injected")
+
+    b = Batcher(cfg, params, batch=2, max_seq=MAX_SEQ, step_hook=hook,
+                prefill_ahead=True, log=lambda *_: None)
+    reqs = [b.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, want_n)]
+    b.run()
+    assert b.failures == 1
+    for req, ref in zip(reqs, refs):
+        assert req.status == "done"
+        assert req.generated == ref, (req.rid, req.generated, ref)
+
+
 def test_eviction_from_queue_and_live_slot(served):
     cfg, params, prompts, _, _, legacy = served
     b = Batcher(cfg, params, batch=1, max_seq=MAX_SEQ)

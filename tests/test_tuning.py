@@ -218,6 +218,39 @@ def test_cache_hit_performs_zero_timed_measurements():
     assert ex3.plan.per_segment == ex2.plan.per_segment
 
 
+def test_device_assortment_shape_and_determinism():
+    """The key ingredient: sorted (platform, kind, count) triples over
+    the FULL device complement, plus the process count."""
+    kinds, procs = tune_cache.device_assortment()
+    assert tune_cache.device_assortment() == (kinds, procs)
+    assert procs >= 1
+    import jax
+    assert sum(n for _, _, n in kinds) == len(jax.devices())
+    assert list(kinds) == sorted(kinds)
+    for platform, kind, n in kinds:
+        assert isinstance(platform, str) and isinstance(kind, str)
+        assert n >= 1
+
+
+def test_tuning_key_changes_with_device_assortment(monkeypatch):
+    """A decision measured on one device assortment must MISS on another
+    (1x cpu vs 8x cpu vs multi-host) — keying by devices()[0] alone used
+    to conflate them all."""
+    g, _ = _record_graph(name="pa")
+    probe = Executor(g, donate=False)
+    key_here = tune_search.tuning_key(probe)
+    seen = set()
+    for fake in ((("cpu", "", 1),), (("cpu", "", 8),),
+                 (("tpu", "TPU v5e", 4),)):
+        for procs in (1, 2):
+            monkeypatch.setattr(tune_cache, "device_assortment",
+                                lambda f=fake, p=procs: (f, p))
+            seen.add(tune_search.tuning_key(probe))
+    assert len(seen) == 6           # every assortment keys differently
+    monkeypatch.undo()
+    assert tune_search.tuning_key(probe) == key_here  # and it's stable
+
+
 def test_corrupt_cache_falls_back_to_heuristics_with_single_warning():
     g, _ = _record_graph(name="pk")
     probe = Executor(g)   # same heuristic plan -> same tuning key

@@ -22,10 +22,14 @@ def main(argv=None) -> int:
                     help="write per-suite timings/rows as JSON")
     args = ap.parse_args(argv)
 
-    from . import (dispatch_overhead, fig13_scaling, overlap_gain,
-                   roofline, serve_load, table2_saxpy, table3_particle,
-                   table4_flux, table5_eikonal, table_layout, table_tuned)
+    from . import (chaos_recovery, dispatch_overhead, fig13_scaling,
+                   overlap_gain, roofline, serve_load, table2_saxpy,
+                   table3_particle, table4_flux, table5_eikonal,
+                   table_layout, table_tuned)
     jobs = [
+        ("Chaos recovery (injected faults: replay cost + latency)",
+         lambda: chaos_recovery.main(
+             num_steps=40 if not args.full else 200)),
         ("Dispatch overhead (region compiler vs per-segment)",
          lambda: dispatch_overhead.main(
              steps=30 if not args.full else 100,

@@ -35,6 +35,13 @@ Pytree = Any
 _SEP = "::"
 
 
+def _fault_trip(site: str, detail: str = "", step=None):
+    # lazy: importing repro.runtime.faults at module scope would cycle
+    # (runtime/__init__ -> supervisor -> repro.checkpoint -> here)
+    from repro.runtime.faults import trip
+    return trip(site, detail, step)
+
+
 def _flatten_with_names(tree: Pytree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names, leaves = [], []
@@ -47,6 +54,7 @@ def _flatten_with_names(tree: Pytree):
 def save_checkpoint(directory: str, step: int, tree: Pytree,
                     extra: Optional[dict] = None) -> str:
     """Synchronous atomic save; returns the final directory."""
+    _fault_trip("checkpoint.save", detail=directory, step=step)
     names, leaves, _ = _flatten_with_names(tree)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"

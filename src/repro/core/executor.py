@@ -95,7 +95,8 @@ import sys
 import threading
 import types
 import warnings
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ThreadPoolExecutor, \
+    TimeoutError as FuturesTimeout
 from contextlib import contextmanager
 from dataclasses import dataclass, field as dfield
 from functools import partial
@@ -108,6 +109,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map_compat
+from ..runtime.faults import (HostTimeoutError, TransientError,
+                              trip as _fault_trip)
 from ..tuning.tiles import tile_scope
 from . import halo as halo_lib
 from . import schedule as schedule_lib
@@ -118,7 +121,8 @@ from .schedule import Region, ScheduleDag
 from .tensor import DistTensor, ReductionResult
 
 __all__ = ["Executor", "execute", "make_mesh", "LayoutPlan", "RelayoutStep",
-           "HaloTransfer", "OverlapFallback", "solve_layouts",
+           "HaloTransfer", "OverlapFallback", "DegradationEvent",
+           "HostTimeoutError", "solve_layouts",
            "layout_candidates", "plan_signature", "ExecutableCacheEntry",
            "clear_executable_cache", "executable_cache_stats"]
 
@@ -253,30 +257,56 @@ class _AsyncRun:
     true data dependency), then runs the callback.  ``donate=True``
     snapshots the arguments at submit time so later donating region
     calls cannot delete the buffers out from under a still-running
-    callback.  ``max_inflight`` bounds the pipeline depth."""
+    callback.  ``max_inflight`` bounds the pipeline depth.
+
+    ``host_timeout`` (seconds, None = no watchdog) arms the hung-
+    callback watchdog: any wait on an in-flight future — the inflight
+    cap, a barrier/epoch drain, or a successor's host-order wait —
+    gives up after that long, raises :class:`HostTimeoutError`
+    (transient), sets the cancel event so every not-yet-started task
+    exits immediately as cancelled, and leaves this context drained and
+    reusable.  Python threads cannot be killed, so a truly hung
+    callback keeps occupying one pool slot until it returns — but the
+    dispatcher, the epoch, and the executor all stay live."""
 
     max_inflight = 32
 
-    def __init__(self, donate: bool):
+    def __init__(self, donate: bool, host_timeout: Optional[float] = None):
         self.donate = donate
+        self.host_timeout = host_timeout
         self.tasks: list = []    # (region_index, Future), dispatch order
         self._prev = None        # tail of the host-order chain
+        self._cancelled = threading.Event()
 
     def submit(self, region_index: int, fn, vals) -> None:
         self.check()
+        _fault_trip("executor.dispatch", detail=f"region{region_index}")
         if len(self.tasks) >= self.max_inflight:
             self._wait_oldest()
         if self.donate:
             vals = [_snapshot_for_host(v) for v in vals]
         leaves = _host_arg_leaves(vals)
         prev = self._prev
+        timeout = self.host_timeout
+        cancelled = self._cancelled
 
         def task():
+            if cancelled.is_set():
+                raise _HostTaskCancelled()
             # Future.exception() blocks until prev completes — this IS
-            # the host-order chain; a failed predecessor cancels us
-            if prev is not None and prev.exception() is not None:
+            # the host-order chain; a failed predecessor cancels us.
+            # Under the watchdog the wait is bounded: a predecessor
+            # still running after host_timeout counts as failed.
+            if prev is not None:
+                try:
+                    if prev.exception(timeout=timeout) is not None:
+                        raise _HostTaskCancelled()
+                except FuturesTimeout:
+                    raise _HostTaskCancelled() from None
+            if cancelled.is_set():
                 raise _HostTaskCancelled()
             jax.block_until_ready(leaves)
+            _fault_trip("executor.host", detail=f"region{region_index}")
             if fn is not None:
                 fn(*vals)
 
@@ -284,10 +314,23 @@ class _AsyncRun:
         self._prev = fut
         self.tasks.append((region_index, fut))
 
-    def _wait_oldest(self) -> None:
-        _, fut = self.tasks[0]
+    def _timed_result(self, region_index: int, fut):
+        """``fut.result`` under the watchdog; a timeout cancels every
+        not-yet-started task and raises :class:`HostTimeoutError`."""
         try:
-            fut.result()     # a real failure propagates to the dispatcher
+            return fut.result(timeout=self.host_timeout)
+        except FuturesTimeout:
+            self._cancelled.set()
+            err = HostTimeoutError(
+                f"host callback of region {region_index} still running "
+                f"after {self.host_timeout}s — cancelling successors")
+            err.site = "executor.host"
+            raise err from None
+
+    def _wait_oldest(self) -> None:
+        region_index, fut = self.tasks[0]
+        try:
+            self._timed_result(region_index, fut)
         except _HostTaskCancelled:
             pass
         self.tasks.pop(0)
@@ -306,11 +349,14 @@ class _AsyncRun:
     def drain(self) -> None:
         """Wait for every in-flight callback; re-raise the FIRST failure
         in dispatch order (cancelled successors are skipped) — the
-        exception a synchronous run would have raised."""
+        exception a synchronous run would have raised.  Under the
+        watchdog each wait is bounded: the first timeout cancels all
+        not-yet-started tasks (which then finish promptly as cancelled)
+        and the drain reports :class:`HostTimeoutError`."""
         first = None
-        for _, fut in self.tasks:
+        for region_index, fut in self.tasks:
             try:
-                fut.result()
+                self._timed_result(region_index, fut)
             except _HostTaskCancelled:
                 pass
             except BaseException as exc:
@@ -324,10 +370,13 @@ class _AsyncRun:
     def abort(self) -> None:
         """Exception-path cleanup: wait out every in-flight callback
         swallowing their errors (another exception is already flying) —
-        no orphaned tasks, no deadlock."""
+        no orphaned tasks, no deadlock.  Bounded waits under the
+        watchdog: a still-hung callback is abandoned to the pool (its
+        successors are cancelled) rather than deadlocking the abort."""
+        self._cancelled.set()
         for _, fut in self.tasks:
             try:
-                fut.result()
+                fut.result(timeout=self.host_timeout)
             except BaseException:
                 pass
         self.tasks.clear()
@@ -388,6 +437,30 @@ class OverlapFallback:
     reason: str
 
 
+@dataclass(frozen=True)
+class DegradationEvent:
+    """One recorded transition of the Executor's graceful-degradation
+    ladder (never silent — rendered by ``plan.describe()`` exactly like
+    :class:`OverlapFallback`).  ``action`` is ``"demote"`` or
+    ``"promote"``; ``frm``/``to`` are ladder level names
+    (:data:`Executor.LADDER`); ``site`` names the failing injection/
+    failure site that drove a demotion (``""`` for promotions);
+    ``passes`` is the executor's lifetime pass counter at the
+    transition."""
+
+    passes: int
+    action: str
+    frm: str
+    to: str
+    site: str
+    reason: str
+
+    def describe(self) -> str:
+        """One line: what moved, which way, and why."""
+        return (f"pass {self.passes}: {self.action} {self.frm} -> "
+                f"{self.to} — {self.reason}")
+
+
 @dataclass
 class LayoutPlan:
     """Solver output plus the executor's halo-transfer schedule.
@@ -426,6 +499,7 @@ class LayoutPlan:
     signature: str = ""
     cache: Optional["ExecutableCacheEntry"] = None
     tuning: Optional[Any] = None
+    degradations: list[DegradationEvent] = dfield(default_factory=list)
 
     def transfers_for_segment(self, segment: int) -> list[HaloTransfer]:
         """The scheduled halo blocks entering one segment (see
@@ -468,11 +542,21 @@ class LayoutPlan:
                     "tune=\"auto\" to measure)")
         return self.tuning.describe()
 
+    def describe_degradations(self) -> str:
+        """One line per recorded ladder transition (demotions with the
+        failing site and reason, promotions after clean passes); says so
+        when the run never degraded."""
+        if not self.degradations:
+            return "(no degradation-ladder transitions)"
+        return "\n".join("ladder " + d.describe() for d in self.degradations)
+
     def describe(self) -> str:
         """The full plan, human-readable: schedule + transfers + regions
-        + cache state (:meth:`describe_dag`) followed by the tuning
+        + cache state (:meth:`describe_dag`), the degradation-ladder
+        transitions (:meth:`describe_degradations`), then the tuning
         report (:meth:`describe_tuning`)."""
-        return f"{self.describe_dag()}\n{self.describe_tuning()}"
+        return (f"{self.describe_dag()}\n{self.describe_degradations()}\n"
+                f"{self.describe_tuning()}")
 
 
 _NATIVE_COMBINE = {"add": lax.psum, "max": lax.pmax, "min": lax.pmin}
@@ -1034,7 +1118,10 @@ class Executor:
                  async_regions: bool = True,
                  tune: str = "off",
                  tile_overrides: Optional[dict[str, Any]] = None,
-                 tune_inputs: Optional[dict[str, Any]] = None):
+                 tune_inputs: Optional[dict[str, Any]] = None,
+                 host_timeout: Optional[float] = None,
+                 degrade: bool = True,
+                 demote_after: int = 2, promote_after: int = 8):
         if schedule not in ("dag", "sequential"):
             raise ValueError(
                 f"schedule must be 'dag' or 'sequential', got {schedule!r}")
@@ -1052,14 +1139,32 @@ class Executor:
         # signature: both modes run the SAME cached executables.
         self.async_regions = bool(async_regions)
         self.tune = tune
+        # hung-callback watchdog (seconds; None = wait forever): bounds
+        # every wait on a pooled host callback — see _AsyncRun
+        self.host_timeout = host_timeout
+        # graceful-degradation ladder: repeated TRANSIENT failures at
+        # one site demote the runtime one level at a time
+        # (async_regions -> sync -> sequential schedule -> heuristic
+        # layouts), and promote_after consecutive clean passes promote
+        # back up; every transition lands in plan.degradations.
+        self.degrade = bool(degrade)
+        self.demote_after = int(demote_after)
+        self.promote_after = int(promote_after)
         self.tensors = graph.all_tensors()
         self.results = graph.all_results()
         self.dag = schedule_lib.build_dag(graph)
-        if schedule == "dag":
-            self._segments = schedule_lib.dag_segments(self.dag)
-        else:
-            self._segments = schedule_lib.sequential_segments(graph)
-            schedule_lib.place_units(self.dag, self._segments)
+        # the user's configured operating point — the top of the ladder
+        # (level 0); _apply_ladder_level restores toward these
+        self._cfg_schedule = schedule
+        self._cfg_async = bool(async_regions)
+        self._user_layout_overrides = dict(layout_overrides or {})
+        self._user_tile_config = dict(tile_overrides or {})
+        self.ladder_level = 0
+        self._site_failures: dict[str, int] = {}
+        self._clean_passes = 0
+        self._pass_counter = 0
+        self._degradations: list[DegradationEvent] = []
+        self._apply_schedule(schedule)
         self._sharded = mesh is not None and any(
             ax is not None for t in self.tensors.values()
             for ax in t.partition)
@@ -1079,6 +1184,110 @@ class Executor:
                 self._tile_config.update(decision.tiles)
                 self._build_plan()
             self.plan.tuning = decision
+
+    #: Ladder levels, fastest first: the configured operating point,
+    #: then synchronous region dispatch, then the sequential reference
+    #: schedule, then heuristic (un-tuned) layouts and tiles.  Demotion
+    #: moves one level down after ``demote_after`` transient failures at
+    #: one site; ``promote_after`` consecutive clean passes move one
+    #: level back up.  Every transition is a DegradationEvent in
+    #: ``plan.degradations``.
+    LADDER = ("async_regions", "sync", "sequential", "heuristic")
+
+    def _apply_schedule(self, schedule: str) -> None:
+        """(Re)build the segment schedule — shared by __init__ and the
+        ladder's "sequential" demotion/repromotion."""
+        self.schedule = schedule
+        if schedule == "dag":
+            self._segments = schedule_lib.dag_segments(self.dag)
+        else:
+            self._segments = schedule_lib.sequential_segments(self.graph)
+            schedule_lib.place_units(self.dag, self._segments)
+
+    def _apply_ladder_level(self, level: int) -> None:
+        """Reconfigure the runtime for one ladder level.  Level 0 is the
+        user's configured operating point; deeper levels stack: 1 turns
+        async region dispatch off, 2 additionally falls back to the
+        sequential reference schedule, 3 additionally drops tuned
+        layout/tile overrides back to the heuristics.  Plan rebuilds
+        reuse the process-wide executable cache keyed by the resulting
+        signature, so bouncing between levels retraces nothing after
+        the first visit."""
+        self.ladder_level = level
+        self.async_regions = self._cfg_async and level < 1
+        want_schedule = self._cfg_schedule if level < 2 else "sequential"
+        want_overrides = dict(self._layout_overrides) if level < 3 \
+            else dict(self._user_layout_overrides)
+        want_tiles = dict(self._tile_config) if level < 3 \
+            else dict(self._user_tile_config)
+        rebuild = (want_schedule != self.schedule
+                   or want_overrides != self._layout_overrides
+                   or want_tiles != self._tile_config)
+        if level >= 3:
+            # drop the tuned configuration (keep it recoverable for
+            # re-promotion in _tuned_layouts/_tuned_tiles)
+            self._tuned_layouts = dict(self._layout_overrides)
+            self._tuned_tiles = dict(self._tile_config)
+        elif getattr(self, "_tuned_layouts", None) is not None:
+            want_overrides = dict(self._tuned_layouts)
+            want_tiles = dict(self._tuned_tiles)
+            rebuild = rebuild or want_overrides != self._layout_overrides
+            self._tuned_layouts = None
+            self._tuned_tiles = None
+        if rebuild:
+            tuning = self.plan.tuning
+            self._apply_schedule(want_schedule)
+            self._layout_overrides = want_overrides
+            self._tile_config = want_tiles
+            self._build_plan()
+            self.plan.tuning = tuning
+
+    def record_failure(self, exc: BaseException, site: str = "") -> bool:
+        """Ladder bookkeeping for one failed pass: transient failures
+        (``TransientError`` — injected chaos, host watchdog timeouts,
+        preemptions) count per ``site``; ``demote_after`` of them at one
+        site demote the executor one ladder level.  Deterministic
+        errors never move the ladder.  Returns True when a demotion
+        happened.  Called automatically by ``__call__``/``run``; public
+        so external drivers (Batcher, Supervisor) can attribute
+        failures they caught themselves."""
+        if not self.degrade or not isinstance(exc, TransientError):
+            return False
+        site = site or getattr(exc, "site", "") or "executor"
+        self._clean_passes = 0
+        n = self._site_failures.get(site, 0) + 1
+        self._site_failures[site] = n
+        if n < self.demote_after \
+                or self.ladder_level >= len(self.LADDER) - 1:
+            return False
+        frm = self.LADDER[self.ladder_level]
+        self._apply_ladder_level(self.ladder_level + 1)
+        self._site_failures[site] = 0
+        self._degradations.append(DegradationEvent(
+            self._pass_counter, "demote", frm,
+            self.LADDER[self.ladder_level], site,
+            f"{n} transient failures at {site} ({exc})"))
+        self.plan.degradations = self._degradations
+        return True
+
+    def _note_clean_pass(self) -> None:
+        """One successful top-level pass: after ``promote_after`` in a
+        row at a degraded level, promote one level back up."""
+        self._pass_counter += 1
+        if self.ladder_level == 0:
+            return
+        self._clean_passes += 1
+        if self._clean_passes < self.promote_after:
+            return
+        frm = self.LADDER[self.ladder_level]
+        self._apply_ladder_level(self.ladder_level - 1)
+        self._clean_passes = 0
+        self._site_failures.clear()
+        self._degradations.append(DegradationEvent(
+            self._pass_counter, "promote", frm,
+            self.LADDER[self.ladder_level], "",
+            f"{self.promote_after} clean passes"))
+        self.plan.degradations = self._degradations
 
     def _build_plan(self) -> None:
         """Solve layouts under the current overrides and derive everything
@@ -1119,6 +1328,9 @@ class Executor:
         self._cache = _EXECUTABLE_CACHE.setdefault(
             self._plan_sig, ExecutableCacheEntry())
         self.plan.cache = self._cache
+        # the ladder's transition log survives plan rebuilds (a demotion
+        # to "sequential"/"heuristic" re-solves the whole plan)
+        self.plan.degradations = self._degradations
         self._fetched: set = set()        # executable keys this instance saw
         self._sub_execs: dict[int, "Executor"] = {}   # per loop segment
         self._jitted: dict[int, Callable] = {}        # regions=False path
@@ -1795,7 +2007,7 @@ class Executor:
             return None
         if not any(r.kind == "host" for r in self._regions):
             return None
-        return _AsyncRun(self.donate)
+        return _AsyncRun(self.donate, self.host_timeout)
 
     def __call__(self, state: dict) -> dict:
         with self._layout_epoch():
@@ -1805,10 +2017,12 @@ class Executor:
                 state = self._restore_initial_layouts(dict(state))
                 if ctx is not None:
                     ctx.drain()
+                self._note_clean_pass()
                 return state
-            except BaseException:
+            except BaseException as exc:
                 if ctx is not None:
                     ctx.abort()
+                self.record_failure(exc)
                 raise
 
     def _pass_once(self, state: dict,
@@ -1837,6 +2051,10 @@ class Executor:
             if ctx is not None:
                 ctx.check()
             if region.kind == "device":
+                # trips BEFORE the executable call: the caller's state
+                # dict is never half-donated, so a retry is safe
+                _fault_trip("executor.region",
+                            detail=f"region{region.index}")
                 fn, exit_layouts = self._region_executable(region)
                 state = fn(state)
                 self._state_layouts.update(exit_layouts)
@@ -1854,6 +2072,8 @@ class Executor:
                 if ctx is not None:
                     ctx.drain()   # barrier: side-effect order vs pool
                 jax.block_until_ready(jax.tree_util.tree_leaves(state))
+                _fault_trip("executor.host",
+                            detail=f"region{region.index}")
                 if node.fn is not None:
                     vals = self._resolve_args(
                         node, state, False, self._state_layouts) \
@@ -1879,6 +2099,7 @@ class Executor:
         for i, (kind, payload) in enumerate(self._segments):
             state = self._apply_segment_layouts(state, i)
             if kind == "device":
+                _fault_trip("executor.region", detail=f"segment{i}")
                 fn = self._jitted.get(i)
                 if fn is None:
                     fn = self._jitted[i] = self._device_fn(payload)
@@ -1898,6 +2119,7 @@ class Executor:
             elif kind == "host":
                 node: Node = payload
                 jax.block_until_ready(jax.tree_util.tree_leaves(state))
+                _fault_trip("executor.host", detail=f"segment{i}")
                 if node.fn is not None:
                     vals = self._resolve_args(
                         node, state, False, self._state_layouts) \
@@ -1933,10 +2155,12 @@ class Executor:
                     # completion point of the epoch: every pooled host
                     # callback has run (or its failure re-raises here)
                     ctx.drain()
+                self._note_clean_pass()
                 return state
-            except BaseException:
+            except BaseException as exc:
                 if ctx is not None:
                     ctx.abort()
+                self.record_failure(exc)
                 raise
 
     def _build_fused_fn(self, entry_layouts: dict[str, Layout]) -> Callable:
@@ -1993,12 +2217,19 @@ class Executor:
         """Device-only fast path: all steps in one jitted fori_loop,
         cached by plan signature + entry layouts."""
         with self._layout_epoch():
-            entry = dict(self._state_layouts)
-            key = ("fused", self._layout_sig(entry))
-            fn = self._fetch(key, lambda: self._build_fused_fn(entry))
-            out = fn(dict(state), steps)
-            self._state_layouts.update(fn.exit_layouts)
-            return self._restore_initial_layouts(dict(out))
+            try:
+                _fault_trip("executor.region", detail="fused")
+                entry = dict(self._state_layouts)
+                key = ("fused", self._layout_sig(entry))
+                fn = self._fetch(key, lambda: self._build_fused_fn(entry))
+                out = fn(dict(state), steps)
+                self._state_layouts.update(fn.exit_layouts)
+                out = self._restore_initial_layouts(dict(out))
+            except BaseException as exc:
+                self.record_failure(exc)
+                raise
+            self._note_clean_pass()
+            return out
 
 
 def execute(graph: Graph, mesh: Optional[Mesh] = None, steps: int = 1,

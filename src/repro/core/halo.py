@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..runtime.faults import trip as _fault_trip
+
 __all__ = [
     "Boundary",
     "HaloAxis",
@@ -312,6 +314,12 @@ def exchange_blocks(
                 a = axes[j]
                 if a.width == 0:
                     continue
+                # chaos injection point: one scheduled halo block.  This
+                # runs at TRACE time (inside jit), so an injected
+                # failure aborts the region build before any donation —
+                # the caller's state is intact for a retry.
+                _fault_trip("halo.block",
+                            detail=f"axis{j}:{a.axis_name or 'fill'}")
                 low, high = _block_pair(blocks[key], a, boundary, constant)
                 blocks[key + ((j, "low"),)] = low
                 blocks[key + ((j, "high"),)] = high

@@ -104,7 +104,17 @@ class MemmapCorpus:
 
 
 class Prefetcher:
-    """Background-thread prefetch (depth-N pipeline) over a batch source."""
+    """Background-thread prefetch (depth-N pipeline) over a batch source.
+
+    Robustness contract: batches are never dropped (the producer blocks
+    — with a stop-aware timeout — until the consumer frees a slot, and
+    a sentinel is only enqueued after the batch it replaces), producer
+    exceptions do not vanish (they re-raise in the consumer from
+    :meth:`next`, wrapped with the failing step), and :meth:`close`
+    leaves no runnable thread behind: the producer checks the stop
+    event between batches AND while blocked on a full queue, so the
+    final ``join`` always completes without relying on daemon teardown.
+    """
 
     def __init__(self, source, start_step: int = 0, depth: int = 2,
                  transform=None):
@@ -114,33 +124,62 @@ class Prefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._step = start_step
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._error_step: Optional[int] = None
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Blocking put that still honors close(); True if enqueued."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def _worker(self):
         step = self._step
         while not self._stop.is_set():
-            batch = self.source.batch_at(step)
-            batch = self.transform(batch)
-            while not self._stop.is_set():
-                try:
-                    self._q.put((step, batch), timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
+            try:
+                batch = self.transform(self.source.batch_at(step))
+            except BaseException as e:
+                self._error_step = step
+                self._error = e
+                self._put((step, e))  # wake the consumer; next() raises
+                return
+            if not self._put((step, batch)):
+                return
             step += 1
 
     def next(self) -> tuple[int, dict]:
-        return self._q.get()
+        """The next ``(step, batch)`` in order; re-raises any producer
+        exception (chained, with the failing step) instead of hanging."""
+        if self._error is not None and self._q.empty():
+            raise RuntimeError(
+                f"prefetch producer failed at step {self._error_step}"
+            ) from self._error
+        step, batch = self._q.get()
+        if isinstance(batch, BaseException):
+            raise RuntimeError(
+                f"prefetch producer failed at step {step}") from batch
+        return step, batch
 
     def close(self):
+        """Stop the producer and reap the thread.  The stop event is
+        checked inside the producer's put-retry loop, so the drain below
+        cannot race it back to sleep; if the thread is mid-``batch_at``
+        we keep draining until it notices the event and exits."""
         self._stop.set()
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
-        self._thread.join(timeout=2.0)
+        while self._thread.is_alive():
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.2)
+        self._thread.join()
 
 
 def make_batches(source, steps: int, start_step: int = 0):

@@ -15,6 +15,13 @@ argmax token sequences are identical to the legacy jit path, the steady
 decode loop traced exactly once, and a freshly constructed worker
 (new Batcher + Executors from the same cfg/params) serves with ZERO new
 traces, straight from the process-wide executable cache.
+
+``--chaos`` (with ``--smoke``) re-serves the same prompts under a
+deterministic fault schedule (``repro.runtime.faults``): mid-decode
+step failures, an admission-scatter failure, and a device-region fault
+inside the decode executor — asserting the Batcher's request-log
+replay recovers with argmax-identical token streams and that a fresh
+worker afterwards still serves with zero new traces.
 """
 
 from __future__ import annotations
@@ -131,6 +138,51 @@ def serve_ripple(cfg, params, args):
             f"fresh worker retraced: {before} -> {after}")
         assert (wgen == gen).all()
         print("[smoke] fresh worker served with 0 new traces  OK")
+
+    if getattr(args, "chaos", False):
+        gen = _chaos_smoke(cfg, params, args, prompts, gen, max_seq)
+    return gen
+
+
+def _chaos_smoke(cfg, params, args, prompts, want, max_seq):
+    """Faulted serve smoke: re-serve the same prompts under a
+    deterministic mid-decode fault schedule (decode-step failures, an
+    admission failure, and a device-region fault inside the decode
+    executor) and hard-assert the Batcher's request-log replay produced
+    argmax-identical token streams — plus a FRESH worker after the
+    chaos run still serves with zero new traces."""
+    from repro.runtime.batcher import Batcher
+    from repro.runtime.faults import Fault, FaultPlan, fault_scope
+
+    plan = FaultPlan([
+        Fault("batcher.step", step=2, times=2),     # two mid-decode faults
+        Fault("batcher.admit", step=0),             # admission scatter fault
+        Fault("executor.region", nth=8),            # inside the decode exec
+    ])
+    batcher = Batcher(cfg, params, batch=args.batch, max_seq=max_seq,
+                      log=lambda *_: None)
+    reqs = [batcher.submit(p, max_new_tokens=args.gen) for p in prompts]
+    with fault_scope(plan):
+        batcher.run()
+    gen = np.stack([r.generated for r in reqs])
+    assert plan.exhausted(), f"not every fault fired:\n{plan.report()}"
+    assert batcher.failures >= 3, batcher.failures
+    assert (gen == want).all(), (
+        f"faulted ripple argmax mismatch:\n{gen}\nvs\n{want}")
+    print(f"[chaos] {batcher.failures} injected failures recovered; "
+          f"token streams identical  OK")
+
+    # post-chaos: a fresh worker (same cfg/params) still serves from the
+    # process-wide executable cache with zero new traces
+    before = batcher.executor.cache_stats()["trace_events"]
+    worker = Batcher(cfg, params, batch=args.batch, max_seq=max_seq)
+    wreqs = [worker.submit(p, max_new_tokens=args.gen) for p in prompts]
+    worker.run()
+    wgen = np.stack([r.generated for r in wreqs])
+    after = worker.executor.cache_stats()["trace_events"]
+    assert after == before, f"post-chaos worker retraced: {before}->{after}"
+    assert (wgen == want).all()
+    print("[chaos] fresh worker after chaos: 0 new traces  OK")
     return gen
 
 
@@ -143,6 +195,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--legacy", action="store_true",
                     help="force the pre-Ripple jit loop")
+    ap.add_argument("--chaos", action="store_true",
+                    help="re-serve under a deterministic fault schedule "
+                         "and assert replay-log recovery (ripple path)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)

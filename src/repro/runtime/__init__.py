@@ -1,9 +1,14 @@
 """Fault-tolerant training + serving runtime."""
 
+from .faults import (Fault, FaultPlan, HostTimeoutError,
+                     InjectedDeterministicFault, InjectedFault, RetryPolicy,
+                     fault_scope, trip)
 from .supervisor import StepStats, Supervisor, TransientError
 
 __all__ = ["Batcher", "Request", "Supervisor", "StepStats",
-           "TransientError"]
+           "TransientError", "Fault", "FaultPlan", "HostTimeoutError",
+           "InjectedFault", "InjectedDeterministicFault", "RetryPolicy",
+           "fault_scope", "trip"]
 
 
 def __getattr__(name):

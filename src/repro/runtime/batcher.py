@@ -16,9 +16,12 @@ stale cache row, which is harmless — their logits are discarded and the
 slot is re-prefilled at admission).
 
 Fault tolerance reuses the Supervisor's machinery (runtime/supervisor.py):
-``StepStats`` Welford straggler detection per decode step, and
-``TransientError`` retry with ``max_failures``/``max_retries_per_step``
-budgets.  Recovery needs no checkpoint store: greedy decode is a pure
+``StepStats`` Welford straggler detection per decode step, and transient
+retries through the shared :class:`repro.runtime.faults.RetryPolicy`
+(exponential backoff, deterministic jitter) under
+``max_failures``/``max_retries_per_step`` budgets — admission faults
+(``batcher.admit``) are retried the same way as decode-step faults
+(``batcher.step``).  Recovery needs no checkpoint store: greedy decode is a pure
 function of the request log, so ``_recover()`` rebuilds the decode state
 by re-prefilling every in-flight request with prompt + generated tokens —
 the request log IS the checkpoint.
@@ -43,6 +46,7 @@ from repro.launch.steps import (make_decode_graph, make_prefill_graph)
 from repro.models import kvcache as kvc
 from repro.models.config import ModelConfig
 
+from .faults import RetryPolicy, trip as _fault_trip
 from .supervisor import StepStats, TransientError
 
 __all__ = ["Request", "Batcher"]
@@ -109,6 +113,7 @@ class Batcher:
                  prefill_ahead: bool = True,
                  executor_opts: Optional[dict] = None,
                  step_hook: Optional[Callable[[int], None]] = None,
+                 retry: Optional[RetryPolicy] = None,
                  log: Callable[[str], None] = print):
         self.cfg = cfg
         self.params = params
@@ -120,6 +125,11 @@ class Batcher:
         self.max_retries_per_step = max_retries_per_step
         self.straggler_zscore = straggler_zscore
         self.step_hook = step_hook
+        # shared transient-retry policy (exponential backoff with
+        # deterministic jitter); the recovery ACTION stays the batcher's
+        # own request-log replay (_recover)
+        self.retry = retry if retry is not None \
+            else RetryPolicy(base_delay=0.01, max_delay=0.25)
         self.log = log
         self._exec_opts = dict(executor_opts or {})
         self.dg = make_decode_graph(cfg, params, batch=batch,
@@ -191,7 +201,11 @@ class Batcher:
             if not self.queue:
                 return
             if self.slots[slot] is None:
-                self._admit(self.queue.popleft(), slot)
+                # peek-admit-pop: a failure mid-admission (faults.py's
+                # "batcher.admit" site) leaves the request at the queue
+                # head, so the retry re-admits instead of losing it
+                self._admit(self.queue[0], slot)
+                self.queue.popleft()
 
     def _prefill_state(self, prompt: np.ndarray):
         pg, exp = self._prefill_for(len(prompt))
@@ -212,6 +226,11 @@ class Batcher:
             self._prepared[req.rid] = self._prefill_state(req.prompt)
 
     def _admit(self, req: Request, slot: int) -> None:
+        # trips BEFORE any state mutation: a failed admission is fully
+        # retryable (the request is still queued / still in the replay
+        # set, and no slot tensor has been scattered yet)
+        _fault_trip("batcher.admit", detail=f"rid{req.rid}",
+                    step=self.steps)
         prompt = np.concatenate([req.prompt,
                                  np.asarray(req.generated[:-1], np.int32)])
         prepared = self._prepared.pop(req.rid, None)
@@ -278,16 +297,29 @@ class Batcher:
     # -- decode steps ------------------------------------------------------
     def step(self) -> bool:
         """Admit what fits, advance every active slot one token.  Returns
-        False when nothing was active (drained)."""
-        self._admit_ready()
-        if self.active_count == 0:
-            return False
+        False when nothing was active (drained).
+
+        Admission runs INSIDE the retried block, so a failure during the
+        admission scatter (faults.py's "batcher.admit" site) recovers
+        exactly like a failed decode step: backoff per the shared
+        :class:`~repro.runtime.faults.RetryPolicy`, then request-log
+        replay (``_recover``) — and since recovery itself re-admits,
+        faults during recovery consume the same retry budget instead of
+        escaping."""
         retries = 0
+        need_recover = False
         while True:
             try:
+                if need_recover:
+                    need_recover = False
+                    self._recover()
+                self._admit_ready()
+                if self.active_count == 0:
+                    return False
                 t0 = time.perf_counter()
                 if self.step_hook is not None:
                     self.step_hook(self.steps)
+                _fault_trip("batcher.step", step=self.steps)
                 self.state = self.executor(self.state)
                 t_dispatch = time.perf_counter() - t0
                 # decode step in flight (async dispatch): admit-ahead —
@@ -306,7 +338,9 @@ class Batcher:
                              f"{dt * 1e3:.1f}ms "
                              f"(mean {self.stats.mean * 1e3:.1f})")
                 break
-            except TransientError as e:
+            except Exception as e:
+                if not self.retry.is_transient(e):
+                    raise
                 self.failures += 1
                 retries += 1
                 if self.failures > self.max_failures:
@@ -316,8 +350,11 @@ class Batcher:
                     raise RuntimeError(
                         f"decode step failed {retries} times") from e
                 self.log(f"[batcher] transient failure ({e}); replaying "
-                         f"{self.active_count} in-flight request(s)")
-                self._recover()
+                         f"{self.active_count} in-flight request(s) "
+                         f"(retry {retries}, backoff "
+                         f"{self.retry.backoff(retries) * 1e3:.0f}ms)")
+                self.retry.backoff_sleep(retries)
+                need_recover = True
         self.steps += 1
         self._harvest()
         return True
@@ -337,14 +374,18 @@ class Batcher:
     def _recover(self) -> None:
         """Rebuild the decode state from the request log (greedy decode is
         deterministic, so re-prefilling prompt + generated tokens restores
-        the exact cache; the last generated token becomes the next input)."""
+        the exact cache; the last generated token becomes the next input).
+
+        Requests stay in ``self.slots`` throughout: recovery itself can
+        take a fault (an injected or real failure during a replay
+        prefill), and the retry calls ``_recover`` again — it must still
+        see EVERY live request.  ``init_state()`` resets the device state
+        wholesale, so a partially re-admitted previous attempt leaves no
+        residue."""
         live = [(slot, req) for slot, req in enumerate(self.slots)
                 if req is not None]
         self.state = self.executor.init_state()
         for slot, req in live:
-            self.slots[slot] = None
-        for slot, req in live:
-            self.slots[slot] = req
             self._admit(req, slot)
 
     def run(self, max_steps: Optional[int] = None) -> list:

@@ -10,9 +10,13 @@ and across failures (DESIGN.md §2/C5).  The supervisor owns:
   (the data pipeline is a pure function of the step counter, so replay is
   exact).
 * **retry with backoff** — transient errors (preemption, DCN flaps,
-  simulated via :class:`TransientError` in tests) retry up to
-  ``max_failures`` times; deterministic errors re-raise after
-  ``max_retries_per_step``.
+  injected chaos via :mod:`repro.runtime.faults`) restore from the last
+  checkpoint and retry through the shared :class:`~repro.runtime.faults.
+  RetryPolicy`: exponential backoff with deterministic jitter, at most
+  ``max_failures`` total failures per run and ``max_retries_per_step``
+  consecutive failures of one step (the per-step budget resets when a
+  restore rewinds to an *earlier* step — replayed steps start fresh).
+  Deterministic errors re-raise immediately.
 * **straggler detection** — per-step wall-time EMA + variance; steps
   slower than ``mean + straggler_zscore * std`` are logged with their
   step index.  On a real fleet this feeds the re-scheduling policy
@@ -33,10 +37,12 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.checkpoint import CheckpointManager
+# TransientError historically lived here; it moved to the stdlib-only
+# faults module so every layer can classify errors — re-exported for
+# backward compatibility.
+from repro.runtime.faults import RetryPolicy, TransientError, trip
 
-
-class TransientError(RuntimeError):
-    """A retryable failure (preemption / link flap); tests raise this."""
+__all__ = ["TransientError", "StepStats", "Supervisor"]
 
 
 @dataclass
@@ -100,7 +106,15 @@ class StepStats:
 
 @dataclass
 class Supervisor:
-    """Drives ``state = step_fn(state, batch)`` with fault tolerance."""
+    """Drives ``state = step_fn(state, batch)`` with fault tolerance.
+
+    Transient failures restore from the last checkpoint and retry under
+    the shared ``retry`` :class:`~repro.runtime.faults.RetryPolicy`
+    (exponential backoff, deterministic jitter).  Recovery episodes are
+    logged in :attr:`recoveries` as ``(failed_step, resumed_step,
+    recovery_ms)`` — ``recovery_ms`` is the wall time from the failure
+    until the failed step next completes successfully — which the chaos
+    benchmark aggregates into steps-lost / p99-recovery stats."""
 
     step_fn: Callable[[Any, Any], Any]
     ckpt: CheckpointManager
@@ -110,9 +124,12 @@ class Supervisor:
     straggler_zscore: float = 3.0
     state_shardings: Any = None
     log: Callable[[str], None] = print
+    retry: RetryPolicy = field(
+        default_factory=lambda: RetryPolicy(base_delay=0.01, max_delay=0.25))
 
     stats: StepStats = field(default_factory=StepStats)
     failures: int = 0
+    recoveries: list = field(default_factory=list)
 
     def run(self, state: Any, batch_at: Callable[[int], Any],
             start_step: int, num_steps: int,
@@ -121,9 +138,11 @@ class Supervisor:
         step = start_step
         end = start_step + num_steps
         retries = 0
+        pending = []  # (failed_step, t_fail) awaiting successful replay
         while step < end:
             try:
                 t0 = time.perf_counter()
+                trip("supervisor.step", step=step)
                 state = self.step_fn(state, batch_at(step))
                 # the async executor returns at dispatch; straggler
                 # detection must see COMPLETION time (StepStats contract)
@@ -135,12 +154,20 @@ class Supervisor:
                     self.log(f"[supervisor] straggler step {step}: "
                              f"{dt*1e3:.1f}ms (mean {self.stats.mean*1e3:.1f})")
                 retries = 0
+                now = time.perf_counter()
+                for failed, t_fail in [p for p in pending if p[0] <= step]:
+                    self.recoveries.append(
+                        (failed, step, (now - t_fail) * 1e3))
+                    pending.remove((failed, t_fail))
                 step += 1
                 if on_step is not None:
                     on_step(step, state)
                 if step % self.ckpt_every == 0:
                     self.ckpt.save(step, state, extra={"step": step})
-            except TransientError as e:
+            except Exception as e:
+                if not self.retry.is_transient(e):
+                    raise
+                t_fail = time.perf_counter()
                 self.failures += 1
                 retries += 1
                 if self.failures > self.max_failures:
@@ -150,8 +177,17 @@ class Supervisor:
                     raise RuntimeError(
                         f"step {step} failed {retries} times") from e
                 self.log(f"[supervisor] transient failure at step {step} "
-                         f"({e}); restoring last checkpoint")
-                state, step = self._restore(state, step)
+                         f"({e}); restoring last checkpoint "
+                         f"(retry {retries}, backoff "
+                         f"{self.retry.backoff(retries)*1e3:.0f}ms)")
+                self.retry.backoff_sleep(retries)
+                state, new_step = self._restore(state, step)
+                if new_step < step:
+                    # rewound to an earlier checkpoint: the replayed
+                    # steps start with a fresh per-step retry budget
+                    retries = 0
+                pending.append((step, t_fail))
+                step = new_step
         self.ckpt.wait()
         return state
 

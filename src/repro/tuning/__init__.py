@@ -23,7 +23,7 @@ the search driver is loaded lazily on first attribute access.
 """
 
 from . import cache, tiles, timing
-from .cache import cache_dir, cache_path, clear_memo
+from .cache import cache_dir, cache_path, clear_memo, tuning_lock
 from .tiles import (active_tiles, record_tile_use, register_tile_kernel,
                     registered_tile_kernels, resolve_tile, tile_candidates,
                     tile_scope)
@@ -31,7 +31,7 @@ from .timing import time_fn, time_fn_split
 
 __all__ = [
     "cache", "tiles", "timing",
-    "cache_dir", "cache_path", "clear_memo",
+    "cache_dir", "cache_path", "clear_memo", "tuning_lock",
     "active_tiles", "record_tile_use", "register_tile_kernel",
     "registered_tile_kernels", "resolve_tile", "tile_candidates",
     "tile_scope",

@@ -19,7 +19,15 @@ Robustness contract:
 * writes are atomic (temp file + ``os.replace``) so a concurrent
   reader never observes a half-written entry;
 * an in-process memo makes repeat loads free (no file IO on the second
-  ``Executor(tune="auto")`` construction in the same process).
+  ``Executor(tune="auto")`` construction in the same process);
+* cross-PROCESS tuning races serialize through a lock file
+  (:func:`tuning_lock`): two processes auto-tuning the same key take
+  the lock around measure+store, so the second blocks until the first
+  persists and then LOADS instead of re-measuring.  The lock is
+  advisory and crash-safe — a stale lock older than ``stale_s`` is
+  broken (the holder died), and an unlockable directory degrades to
+  running unlocked (worst case: duplicated measurement, last atomic
+  write wins — exactly the pre-lock behavior).
 """
 
 from __future__ import annotations
@@ -27,12 +35,14 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import time
 import warnings
+from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Optional
 
 __all__ = ["SCHEMA_VERSION", "cache_dir", "cache_path", "device_assortment",
-           "load", "store", "clear_memo"]
+           "load", "store", "clear_memo", "tuning_lock"]
 
 SCHEMA_VERSION = 1
 
@@ -109,6 +119,7 @@ def load(key: str) -> Optional[dict]:
     if memo is not None:
         return memo
     path = cache_path(key)
+    _corrupt_if_scheduled(path)
     try:
         text = path.read_text()
     except FileNotFoundError:
@@ -169,3 +180,82 @@ def clear_memo() -> None:
     """Drop the in-process memo and warning dedup (tests)."""
     _MEMO.clear()
     _WARNED.clear()
+
+
+def _corrupt_if_scheduled(path: Path) -> None:
+    """Chaos hook: a scheduled ``tuning.cache.load`` fault of kind
+    ``"corrupt"`` garbles the cache file in place before the read, so
+    the EXISTING corrupt-file fallback (warn once, treat as miss) is
+    what gets exercised; ``"error"``-kind faults raise here instead."""
+    from repro.runtime.faults import current_plan
+
+    plan = current_plan()
+    if plan is None:
+        return
+    fault = plan.trip("tuning.cache.load", detail=str(path))
+    if fault is not None and fault.kind == "corrupt" and path.exists():
+        path.write_text("{ this is not json —")
+
+
+# -- cross-process lock --------------------------------------------------------
+
+@contextmanager
+def tuning_lock(key: str, timeout_s: float = 120.0, stale_s: float = 600.0,
+                poll_s: float = 0.05):
+    """Advisory cross-process lock for one tuning key.
+
+    ``O_CREAT | O_EXCL`` on ``<key>.lock`` is the atomic acquire (NFS-
+    and POSIX-safe without fcntl); the holder's pid and timestamp go in
+    the file for debuggability.  Waiters poll; a lock file older than
+    ``stale_s`` is broken (its creator died mid-measure), and a waiter
+    that cannot acquire within ``timeout_s`` — or cannot create files
+    in the cache dir at all — proceeds UNLOCKED with a warning, because
+    duplicated measurement is strictly better than a wedged process
+    (the final ``os.replace`` in :func:`store` keeps whichever write
+    lands last, both of which are valid measurements)."""
+    lock = cache_dir() / f"{key}.lock"
+    acquired = False
+    deadline = time.monotonic() + timeout_s
+    try:
+        cache_dir().mkdir(parents=True, exist_ok=True)
+    except OSError:
+        yield False
+        return
+    while True:
+        try:
+            fd = os.open(str(lock), os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            with os.fdopen(fd, "w") as f:
+                f.write(f"{os.getpid()} {time.time()}\n")
+            acquired = True
+            break
+        except FileExistsError:
+            try:
+                age = time.time() - lock.stat().st_mtime
+            except OSError:       # holder released between open and stat
+                continue
+            if age > stale_s:
+                try:              # break the stale lock; race-safe: only
+                    lock.unlink()  # one unlink succeeds, then both retry
+                except OSError:
+                    pass
+                continue
+            if time.monotonic() > deadline:
+                warnings.warn(
+                    f"repro-tune lock {lock} held for {timeout_s:.0f}s — "
+                    f"proceeding unlocked (duplicate measurement)",
+                    RuntimeWarning, stacklevel=3)
+                break
+            time.sleep(poll_s)
+        except OSError as exc:
+            warnings.warn(
+                f"repro-tune lock {lock} could not be created ({exc}) — "
+                f"proceeding unlocked", RuntimeWarning, stacklevel=3)
+            break
+    try:
+        yield acquired
+    finally:
+        if acquired:
+            try:
+                lock.unlink()
+            except OSError:
+                pass

@@ -202,9 +202,26 @@ def resolve_tuning(executor, mode: str) -> TuningDecision:
     STATS["cache_misses"] += 1
     if mode == "load":
         return TuningDecision("heuristic", key)
-    dec = measure_plan(executor, key)
-    cache_lib.store(key, _payload(dec))
-    STATS["stores"] += 1
+    # cross-process serialization: the first process to take the key's
+    # lock measures and persists; any process that waited re-checks the
+    # cache under the lock and loads instead of duplicating the
+    # measurement (cache.tuning_lock degrades to unlocked on trouble)
+    with cache_lib.tuning_lock(key) as locked:
+        if locked:
+            # misses are never memoized, so this re-reads the FILE — it
+            # sees anything a lock holder persisted while we waited
+            payload = cache_lib.load(key)
+            if payload is not None:
+                try:
+                    dec = _decision_from_payload(key, payload)
+                except (KeyError, TypeError, ValueError):
+                    pass
+                else:
+                    STATS["cache_hits"] += 1
+                    return dec
+        dec = measure_plan(executor, key)
+        cache_lib.store(key, _payload(dec))
+        STATS["stores"] += 1
     return dec
 
 

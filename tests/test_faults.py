@@ -1,0 +1,577 @@
+"""Chaos suite: deterministic fault injection across the runtime.
+
+Every test installs a :class:`FaultPlan` (``repro.runtime.faults``)
+scheduling named faults at exact ``(step, site)`` coordinates and
+asserts *bitwise-equal* recovery — injected chaos must be invisible in
+the results, visible only in the fault log / degradation ladder.
+
+Covers: the fault-kind x {async, sync} x {dag, sequential} chaos
+matrix on the executor, the hung-callback watchdog, the graceful-
+degradation ladder (demotion AND re-promotion), halo-block faults,
+FaultPlan/RetryPolicy unit semantics, Supervisor restore edge cases +
+deterministic straggler injection + checkpoint-write faults, the
+Prefetcher robustness contract, and the tuning cache's corrupt-file
+fallback and cross-process lock protocol.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+import warnings
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (Boundary, DistTensor, ExecutionKind, Executor, Graph,
+                        HostTimeoutError, clear_executable_cache,
+                        concurrent_padded_access)
+from repro.data import Prefetcher
+from repro.runtime import Supervisor, TransientError
+from repro.runtime.faults import (Fault, FaultPlan, InjectedDeterministicFault,
+                                  InjectedFault, RetryPolicy, fault_scope,
+                                  trip)
+from repro.tuning import cache as tcache
+
+# backoff-free policy: chaos tests retry instantly and deterministically
+_NOSLEEP = RetryPolicy(max_retries=6, base_delay=0.0, sleep=lambda d: None)
+_SILENT = staticmethod(lambda *_: None)
+
+
+def _chain_graph(seen=None, name="chaos-chain"):
+    """device split -> host callback -> device split (the async-runtime
+    shape: both device regions AND a pooled host node to fault)."""
+    a = DistTensor("a", (8,))
+    g = Graph(name=name)
+    g.split(lambda x: x + 1.0, a, writes=(0,))
+    sink = seen if seen is not None else []
+    g.then(lambda x: sink.append(float(np.asarray(x)[0])),
+           exec_kind=ExecutionKind.Cpu, args=(a,))
+    g.then_split(lambda x: x * 2.0, a, writes=(0,))
+    return g
+
+
+def _assert_state_equal(got, want):
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]))
+
+
+# -- the chaos matrix: kind x dispatch mode x schedule ------------------------
+
+_KINDS = [
+    ("region-error", lambda: Fault("executor.region", nth=0)),
+    ("host-error", lambda: Fault("executor.host", nth=0)),
+    ("region-delay", lambda: Fault("executor.region", nth=0,
+                                   kind="delay", delay_s=0.01)),
+]
+
+
+@pytest.mark.parametrize("schedule", ["dag", "sequential"])
+@pytest.mark.parametrize("async_regions", [True, False],
+                         ids=["async", "sync"])
+@pytest.mark.parametrize("kind,mk", _KINDS, ids=[k for k, _ in _KINDS])
+def test_chaos_matrix_bitwise_recovery(kind, mk, async_regions, schedule):
+    """Every fault kind, in every dispatch mode and schedule, recovers to
+    a bitwise-identical state under the shared RetryPolicy — and the
+    executor stays usable afterwards."""
+    g = _chain_graph()
+    ref = Executor(g, donate=False, schedule=schedule,
+                   async_regions=async_regions)
+    s0 = ref.init_state()
+    want = ref(dict(s0))
+
+    ex = Executor(g, donate=False, schedule=schedule,
+                  async_regions=async_regions)
+    plan = FaultPlan([mk()])
+    with fault_scope(plan):
+        got = _NOSLEEP.call(lambda: ex(dict(s0)))
+    assert plan.exhausted(), plan.report()
+    _assert_state_equal(got, want)
+    # recovered executor completes a subsequent clean pass
+    _assert_state_equal(ex(dict(s0)), want)
+
+
+def test_dispatch_fault_recovers_in_async_mode():
+    """A fault at host-pool submission (async dispatcher only) is
+    transient: the pass aborts cleanly and the retry is bitwise-equal."""
+    g = _chain_graph()
+    ex = Executor(g, donate=False, async_regions=True)
+    s0 = ex.init_state()
+    want = ex(dict(s0))
+    plan = FaultPlan([Fault("executor.dispatch", nth=0)])
+    with fault_scope(plan):
+        got = _NOSLEEP.call(lambda: ex(dict(s0)))
+    assert plan.exhausted(), plan.report()
+    _assert_state_equal(got, want)
+
+
+def test_halo_block_fault_aborts_build_then_recovers():
+    """A fault in one scheduled halo-block transfer aborts the pass
+    before any state is consumed; the retry re-runs the exchange and the
+    stencil result is bitwise-identical."""
+    clear_executable_cache()   # halo trips fire when the exchange runs
+    src = DistTensor("src", (32,), halo=(1,), boundary=Boundary.TRANSMISSIVE)
+    dst = DistTensor("dst", (32,))
+    g = Graph(name="chaos-halo")
+    g.split(lambda s, d: s[2:] - s[:-2], concurrent_padded_access(src), dst)
+    x0 = np.arange(32, dtype=np.float32)
+
+    ref = Executor(g, donate=False)
+    s0 = ref.init_state(src=x0)
+    want = ref(dict(s0))
+
+    clear_executable_cache()
+    ex = Executor(g, donate=False)
+    plan = FaultPlan([Fault("halo.block", nth=0)])
+    with fault_scope(plan):
+        got = _NOSLEEP.call(lambda: ex(dict(s0)))
+    assert plan.exhausted(), plan.report()
+    _assert_state_equal(got, want)
+
+
+# -- hung-callback watchdog ---------------------------------------------------
+
+def test_watchdog_trips_hung_callback_without_deadlock():
+    """A host callback that hangs past ``host_timeout`` raises
+    HostTimeoutError (transient) instead of deadlocking — and the
+    executor (and the shared host pool) stay usable afterwards."""
+    g = _chain_graph()
+    ex = Executor(g, donate=False, host_timeout=0.3, degrade=False)
+    s0 = ex.init_state()
+    want = ex(dict(s0))
+
+    plan = FaultPlan([Fault("executor.host", nth=0,
+                            kind="delay", delay_s=1.5)])
+    t0 = time.perf_counter()
+    with fault_scope(plan):
+        with pytest.raises(HostTimeoutError):
+            ex(dict(s0))
+    assert time.perf_counter() - t0 < 1.4, "watchdog waited out the hang"
+    assert isinstance(HostTimeoutError("x"), TransientError)
+    # the hung worker still occupies its pool slot, but the executor
+    # itself completes subsequent clean passes
+    _assert_state_equal(ex(dict(s0)), want)
+
+
+def test_watchdog_cancels_successor_callbacks():
+    """When a host callback hangs, its successors on the host-order
+    chain are cancelled — they never execute their side effects."""
+    seen = []
+    a = DistTensor("a", (8,))
+    g = Graph(name="chaos-two-hosts")
+    g.split(lambda x: x + 1.0, a, writes=(0,))
+    g.then(lambda x: seen.append("first"),
+           exec_kind=ExecutionKind.Cpu, args=(a,))
+    g.then(lambda x: seen.append("second"),
+           exec_kind=ExecutionKind.Cpu, args=(a,))
+    ex = Executor(g, donate=False, host_timeout=0.25, degrade=False)
+    s0 = ex.init_state()
+    ex(dict(s0))
+    assert seen == ["first", "second"]
+
+    base = len(seen)
+    plan = FaultPlan([Fault("executor.host", nth=0,
+                            kind="delay", delay_s=1.0)])
+    with fault_scope(plan):
+        with pytest.raises(HostTimeoutError):
+            ex(dict(s0))
+    time.sleep(1.2)   # let the hung worker finish its injected sleep
+    assert "second" not in seen[base:], seen[base:]
+
+
+# -- the graceful-degradation ladder ------------------------------------------
+
+def test_ladder_demotes_then_repromotes():
+    """Repeated transient failures at one site walk the executor down
+    the ladder one level per ``demote_after`` failures; ``promote_after``
+    consecutive clean passes walk it back up.  Results stay bitwise-
+    identical at every level, and every transition is introspectable in
+    ``plan.degradations`` / ``plan.describe()``."""
+    g = _chain_graph()
+    ex = Executor(g, donate=False, demote_after=1, promote_after=2)
+    s0 = ex.init_state()
+    want = ex(dict(s0))
+
+    plan = FaultPlan([Fault("executor.region", nth=0, times=2)])
+    with fault_scope(plan):
+        got = _NOSLEEP.call(lambda: ex(dict(s0)))
+    assert plan.exhausted(), plan.report()
+    _assert_state_equal(got, want)
+
+    # two failures at executor.region with demote_after=1:
+    # async_regions -> sync -> sequential
+    assert ex.ladder_level == 2
+    assert not ex.async_regions and ex.schedule == "sequential"
+    evs = ex.plan.degradations
+    assert [(e.action, e.frm, e.to) for e in evs] == [
+        ("demote", "async_regions", "sync"),
+        ("demote", "sync", "sequential")]
+    assert all(e.site == "executor.region" for e in evs)
+    text = ex.plan.describe()
+    assert "ladder" in text and "demote" in text
+
+    # re-promotion: promote_after=2 clean passes climb one level each
+    _assert_state_equal(ex(dict(s0)), want)   # (recovery pass was clean #1)
+    assert ex.ladder_level == 1
+    for _ in range(2):
+        _assert_state_equal(ex(dict(s0)), want)
+    assert ex.ladder_level == 0
+    assert ex.async_regions and ex.schedule == "dag"
+    actions = [e.action for e in ex.plan.degradations]
+    assert actions == ["demote", "demote", "promote", "promote"]
+
+
+def test_deterministic_fault_bypasses_retry_and_ladder():
+    """``transient=False`` faults raise InjectedDeterministicFault:
+    RetryPolicy re-raises immediately and the ladder does not move."""
+    g = _chain_graph()
+    ex = Executor(g, donate=False, demote_after=1)
+    s0 = ex.init_state()
+    ex(dict(s0))
+    plan = FaultPlan([Fault("executor.region", nth=0, transient=False)])
+    calls = []
+    with fault_scope(plan):
+        with pytest.raises(InjectedDeterministicFault):
+            _NOSLEEP.call(lambda: (calls.append(1), ex(dict(s0))))
+    assert len(calls) == 1          # no retry
+    assert ex.ladder_level == 0
+    assert ex.plan.degradations == []
+
+
+# -- FaultPlan semantics ------------------------------------------------------
+
+def test_fault_validation_rejects_bad_plans():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        Fault("executor.regino", nth=0)
+    with pytest.raises(ValueError, match="coordinate"):
+        Fault("executor.region")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("executor.region", nth=0, kind="nuke")
+
+
+def test_fault_step_coordinate_and_site_attribution():
+    plan = FaultPlan([Fault("batcher.step", step=3)])
+    with fault_scope(plan):
+        for s in range(3):
+            assert trip("batcher.step", step=s) is None
+        with pytest.raises(InjectedFault) as ei:
+            trip("batcher.step", step=3)
+        assert trip("batcher.step", step=3) is None   # times=1 spent
+    assert ei.value.site == "batcher.step"
+    assert isinstance(ei.value, TransientError)
+    assert plan.exhausted()
+    assert plan.visits["batcher.step"] == 5
+
+
+def test_fault_nth_times_and_match_filters():
+    plan = FaultPlan([Fault("executor.region", nth=1, times=2,
+                            match="segment")])
+    with fault_scope(plan):
+        trip("executor.region", detail="segment0")   # visit 0: before nth
+        with pytest.raises(InjectedFault):
+            trip("executor.region", detail="segment1")
+        trip("executor.region", detail="region2")    # match filter: no fire
+        with pytest.raises(InjectedFault):
+            trip("executor.region", detail="segment3")
+        trip("executor.region", detail="segment4")   # times exhausted
+    assert plan.exhausted()
+    assert [d for _, d, _, _ in plan.fired] == ["segment1", "segment3"]
+
+
+def test_delay_fault_sleeps_then_continues():
+    plan = FaultPlan([Fault("supervisor.step", nth=0,
+                            kind="delay", delay_s=0.05)])
+    with fault_scope(plan):
+        t0 = time.perf_counter()
+        f = trip("supervisor.step")
+        dt = time.perf_counter() - t0
+    assert f is not None and f.kind == "delay"
+    assert dt >= 0.04
+    assert plan.exhausted()
+
+
+def test_trip_is_noop_without_a_plan():
+    assert trip("executor.region", detail="x") is None
+
+
+def test_plan_report_lists_visits_and_fired():
+    plan = FaultPlan([Fault("batcher.step", nth=0),
+                      Fault("halo.block", nth=5)])
+    with fault_scope(plan):
+        with pytest.raises(InjectedFault):
+            trip("batcher.step")
+    assert not plan.exhausted()
+    r = plan.report()
+    assert "batcher.step" in r and "FIRED" in r
+
+
+# -- RetryPolicy semantics ----------------------------------------------------
+
+def test_retry_policy_classification():
+    pol = RetryPolicy()
+    assert pol.is_transient(TransientError("x"))
+    assert pol.is_transient(InjectedFault("x"))
+    assert pol.is_transient(HostTimeoutError("x"))
+    assert not pol.is_transient(ValueError("x"))
+    assert not pol.is_transient(InjectedDeterministicFault("x"))
+    extra = RetryPolicy(transient_types=(ConnectionError,))
+    assert extra.is_transient(ConnectionError("x"))
+
+
+def test_retry_policy_backoff_deterministic_and_capped():
+    a, b = RetryPolicy(seed=7), RetryPolicy(seed=7)
+    seq = [a.backoff(n) for n in range(1, 9)]
+    assert seq == [b.backoff(n) for n in range(1, 9)]
+    assert all(d <= a.max_delay * (1 + a.jitter) for d in seq)
+    assert seq[1] > seq[0]   # exponential growth before the cap
+    assert RetryPolicy(seed=1).backoff(1) != RetryPolicy(seed=2).backoff(1)
+
+
+def test_retry_policy_call_retries_then_raises():
+    sleeps = []
+    pol = RetryPolicy(max_retries=3, base_delay=0.01, sleep=sleeps.append)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientError("boom")
+        return "ok"
+
+    assert pol.call(flaky) == "ok"
+    assert calls["n"] == 3 and len(sleeps) == 2
+
+    with pytest.raises(TransientError):
+        pol.call(lambda: (_ for _ in ()).throw(TransientError("down")))
+    assert len(sleeps) == 2 + pol.max_retries   # budget exhausted with backoff
+    n0 = len(sleeps)
+    with pytest.raises(ValueError):   # deterministic: no retry, no sleep
+        pol.call(lambda: (_ for _ in ()).throw(ValueError("no")))
+    assert len(sleeps) == n0
+
+
+# -- Supervisor: restore edge cases, stragglers, checkpoint faults ------------
+
+def _fastsup(**kw):
+    kw.setdefault("log", lambda *_: None)
+    kw.setdefault("retry", RetryPolicy(base_delay=0.0, sleep=lambda d: None))
+    return Supervisor(**kw)
+
+
+def test_supervisor_restore_without_checkpoint_replays_in_place(tmp_path):
+    """A transient failure before the first checkpoint restores to the
+    SAME step with the live state — and logs a recovery episode."""
+    armed = {"on": True}
+
+    def step_fn(state, batch):
+        if armed["on"] and int(state["x"]) == 2:
+            armed["on"] = False
+            raise TransientError("hiccup")
+        return {"x": state["x"] + batch}
+
+    sup = _fastsup(step_fn=step_fn,
+                   ckpt=CheckpointManager(str(tmp_path / "ck")),
+                   ckpt_every=10**9)
+    state = sup.run({"x": jnp.zeros(())}, lambda i: jnp.asarray(1.0), 0, 6)
+    assert float(state["x"]) == 6.0
+    assert sup.failures == 1
+    assert len(sup.recoveries) == 1
+    failed, resumed, ms = sup.recoveries[0]
+    assert (failed, resumed) == (2, 2) and ms >= 0.0
+
+
+def test_supervisor_restore_after_resize_with_none_shardings(tmp_path):
+    """``resize()`` to explicit per-leaf None shardings must not break a
+    later checkpoint restore (device_put without a target sharding)."""
+    armed = {"on": True}
+
+    def step_fn(state, batch):
+        if armed["on"] and int(state["x"]) == 3:
+            armed["on"] = False
+            raise TransientError("flap")
+        return {"x": state["x"] + 1.0}
+
+    sup = _fastsup(step_fn=step_fn,
+                   ckpt=CheckpointManager(str(tmp_path / "ck")),
+                   ckpt_every=2)
+    state = sup.resize({"x": jnp.zeros(())}, {"x": None})
+    assert sup.state_shardings == {"x": None}
+    state = sup.run(state, lambda i: None, 0, 6)
+    assert float(state["x"]) == 6.0
+    assert sup.failures == 1
+    # rewound to the step-2 checkpoint: per-step retry budget was reset
+    failed, resumed, _ = sup.recoveries[0]
+    assert failed == 3 and resumed == 3
+
+
+def test_injected_slow_step_is_flagged_straggler(tmp_path):
+    """A delay-kind fault at supervisor.step makes straggler detection
+    deterministic: the injected step is flagged with its wall time."""
+    sup = _fastsup(step_fn=lambda s, b: s,
+                   ckpt=CheckpointManager(str(tmp_path / "ck")),
+                   ckpt_every=10**9, straggler_zscore=3.0)
+    plan = FaultPlan([Fault("supervisor.step", step=18,
+                            kind="delay", delay_s=0.25)])
+    with fault_scope(plan):
+        sup.run({"x": jnp.zeros(())}, lambda i: None, 0, 24)
+    assert plan.exhausted()
+    flagged = [s for s, dt in sup.stats.stragglers]
+    assert 18 in flagged
+    dt = dict(sup.stats.stragglers)[18]
+    assert dt >= 0.25
+
+
+def test_checkpoint_write_fault_is_retried_transparently(tmp_path):
+    """An injected checkpoint.save failure surfaces on the next save's
+    wait() INSIDE the supervised loop, is classified transient, and the
+    run completes with the correct state."""
+    plan = FaultPlan([Fault("checkpoint.save", nth=0)])
+    sup = _fastsup(step_fn=lambda s, b: {"x": s["x"] + 1.0},
+                   ckpt=CheckpointManager(str(tmp_path / "ck")),
+                   ckpt_every=5)
+    with fault_scope(plan):
+        state = sup.run({"x": jnp.zeros(())}, lambda i: None, 0, 10)
+    assert plan.exhausted(), plan.report()
+    assert float(state["x"]) == 10.0
+    assert sup.failures == 1
+
+
+# -- Prefetcher robustness contract -------------------------------------------
+
+class _Source:
+    def __init__(self, fail_at=None):
+        self.fail_at = fail_at
+
+    def batch_at(self, step):
+        if self.fail_at is not None and step == self.fail_at:
+            raise ValueError(f"bad shard at {step}")
+        return {"step": np.asarray(step)}
+
+
+def test_prefetcher_propagates_producer_error_with_step():
+    pf = Prefetcher(_Source(fail_at=2), depth=2)
+    assert pf.next()[0] == 0
+    assert pf.next()[0] == 1
+    with pytest.raises(RuntimeError, match="step 2") as ei:
+        pf.next()
+    assert isinstance(ei.value.__cause__, ValueError)
+    pf.close()
+    assert not pf._thread.is_alive()
+
+
+def test_prefetcher_never_drops_batches_under_slow_consumer():
+    pf = Prefetcher(_Source(), depth=1)
+    got = []
+    for _ in range(12):
+        time.sleep(0.005)   # let the producer outrun the queue
+        step, batch = pf.next()
+        got.append(step)
+        assert int(batch["step"]) == step
+    pf.close()
+    assert got == list(range(12))
+    assert not pf._thread.is_alive()
+
+
+def test_prefetcher_close_reaps_blocked_producer():
+    pf = Prefetcher(_Source(), depth=1)
+    time.sleep(0.05)   # producer is now blocked on the full queue
+    pf.close()
+    assert not pf._thread.is_alive()
+
+
+# -- tuning cache: corrupt-file fallback + cross-process lock -----------------
+
+def test_corrupt_fault_exercises_warn_once_fallback(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    tcache.clear_memo()
+    key = "chaoskey"
+    tcache.store(key, {"layouts": {}, "tiles": {}, "measurements": []})
+    tcache.clear_memo()   # force the (about-to-be-garbled) file read
+
+    plan = FaultPlan([Fault("tuning.cache.load", nth=0, kind="corrupt")])
+    with fault_scope(plan):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            assert tcache.load(key) is None
+    assert plan.exhausted()
+    assert any(issubclass(x.category, RuntimeWarning) for x in w)
+
+    # second read of the same corrupt file: still a miss, NO new warning
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        assert tcache.load(key) is None
+    assert not any(issubclass(x.category, RuntimeWarning) for x in w2)
+    tcache.clear_memo()
+
+
+def test_error_fault_on_cache_load_raises(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    tcache.clear_memo()
+    with fault_scope(FaultPlan([Fault("tuning.cache.load", nth=0)])):
+        with pytest.raises(InjectedFault):
+            tcache.load("anything")
+    tcache.clear_memo()
+
+
+def test_tuning_lock_acquire_release(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    with tcache.tuning_lock("k") as got:
+        assert got is True
+        assert (tmp_path / "k.lock").exists()
+    assert not (tmp_path / "k.lock").exists()
+
+
+def test_tuning_lock_breaks_stale_lock(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    lock = tmp_path / "k.lock"
+    lock.write_text("999999 0\n")
+    old = time.time() - 3600
+    os.utime(lock, (old, old))
+    t0 = time.perf_counter()
+    with tcache.tuning_lock("k", timeout_s=10.0, stale_s=60.0) as got:
+        assert got is True
+    assert time.perf_counter() - t0 < 5.0
+    assert not lock.exists()
+
+
+def test_tuning_lock_timeout_proceeds_unlocked(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    lock = tmp_path / "k.lock"
+    lock.write_text(f"{os.getpid()} {time.time()}\n")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with tcache.tuning_lock("k", timeout_s=0.2, stale_s=3600.0) as got:
+            assert got is False
+    assert any("proceeding unlocked" in str(x.message) for x in w)
+    assert lock.exists()   # not ours: left in place
+
+
+def test_tuning_lock_cross_process_mutual_exclusion(tmp_path):
+    """Two processes do racing read-modify-write increments under
+    ``tuning_lock``; no update may be lost."""
+    src_dir = Path(tcache.__file__).resolve().parents[2]
+    code = textwrap.dedent("""
+        import json
+        from repro.tuning import cache
+        p = cache.cache_dir() / "counter.json"
+        for _ in range(15):
+            with cache.tuning_lock("ctr", timeout_s=120.0) as got:
+                assert got, "lock must be acquired"
+                n = json.loads(p.read_text())["n"] if p.exists() else 0
+                p.write_text(json.dumps({"n": n + 1}))
+    """)
+    env = dict(os.environ, REPRO_TUNE_CACHE=str(tmp_path),
+               PYTHONPATH=str(src_dir))
+    procs = [subprocess.Popen([sys.executable, "-c", code], env=env)
+             for _ in range(2)]
+    for p in procs:
+        assert p.wait(timeout=300) == 0
+    assert json.loads((tmp_path / "counter.json").read_text())["n"] == 30
+    assert not (tmp_path / "ctr.lock").exists()

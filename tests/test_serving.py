@@ -195,6 +195,52 @@ def test_transient_failure_replays_request_log(served):
         assert req.generated == ref, (req.rid, req.generated, ref)
 
 
+def test_injected_admission_and_step_faults_replay_identically(served):
+    """Scheduled faults (repro.runtime.faults) at the batcher's real
+    injection sites — an admission scatter failure and a mid-decode step
+    failure — recover through the request-log replay with chains exactly
+    equal to the fault-free references."""
+    from repro.runtime.faults import Fault, FaultPlan, RetryPolicy, fault_scope
+
+    cfg, params, prompts, want_n, refs, _ = served
+    b = Batcher(cfg, params, batch=2, max_seq=MAX_SEQ, log=lambda *_: None,
+                retry=RetryPolicy(base_delay=0.0, sleep=lambda d: None))
+    reqs = [b.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, want_n)]
+    plan = FaultPlan([Fault("batcher.admit", step=0),
+                      Fault("batcher.step", step=1)])
+    with fault_scope(plan):
+        b.run()
+    assert plan.exhausted(), plan.report()
+    assert b.failures == 2
+    for req, ref in zip(reqs, refs):
+        assert req.status == "done"
+        assert req.generated == ref, (req.rid, req.generated, ref)
+
+
+def test_fault_during_recovery_loses_no_requests(served):
+    """Recovery itself takes a fault: the decode step fails at step 2 and
+    the replay's re-admission fails too.  The second recovery attempt
+    must still see every live request (slots are never cleared
+    destructively) and finish all chains exactly."""
+    from repro.runtime.faults import Fault, FaultPlan, RetryPolicy, fault_scope
+
+    cfg, params, prompts, want_n, refs, _ = served
+    b = Batcher(cfg, params, batch=2, max_seq=MAX_SEQ, log=lambda *_: None,
+                retry=RetryPolicy(base_delay=0.0, sleep=lambda d: None))
+    reqs = [b.submit(p, max_new_tokens=n)
+            for p, n in zip(prompts, want_n)]
+    plan = FaultPlan([Fault("batcher.step", step=2),
+                      Fault("batcher.admit", step=2)])   # fires mid-replay
+    with fault_scope(plan):
+        b.run()
+    assert plan.exhausted(), plan.report()
+    assert b.failures == 2
+    for req, ref in zip(reqs, refs):
+        assert req.status == "done", (req.rid, req.status)
+        assert req.generated == ref, (req.rid, req.generated, ref)
+
+
 def test_failure_budget_exhausted_raises(served):
     cfg, params, prompts, _, _, _ = served
 

@@ -46,6 +46,10 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
+from repro.analysis import analyze_hlo
+
 from .common import Csv, gbps, time_fn
 
 # reference hardware constants (TPU v5e class, per the brief) — the
@@ -68,11 +72,21 @@ def measure_copy_peak(n_floats: int = 1 << 21) -> float:
     return gbps(2 * x.nbytes, ms)
 
 
-def _row(csv, kernel, n_label, ms, nbytes, peak):
+def _model_bytes(fn, *args) -> float:
+    """Traffic predicted by the loop-aware HLO cost model
+    (``repro.analysis.analyze_hlo``) for the jitted kernel — the same
+    model the joint autotuner prunes candidates with, reported here next
+    to the analytic ``known_bytes`` so the roofline documents how far
+    the pruning model sits from the hand-counted minimum per kernel."""
+    return analyze_hlo(jax.jit(fn).lower(*args).compile().as_text())["bytes"]
+
+
+def _row(csv, kernel, n_label, ms, nbytes, peak, model_bytes=0.0):
     achieved = gbps(nbytes, ms)
     csv.row(kernel, n_label, ms, nbytes, achieved, peak,
             achieved / max(peak, 1e-9),
-            achieved / (HBM_BW / 1e9))
+            achieved / (HBM_BW / 1e9),
+            model_bytes, model_bytes / max(nbytes, 1))
     return achieved
 
 
@@ -84,7 +98,7 @@ def main(n=1 << 20, particle_n=262_144, flux_shape=(256, 256),
     would make fraction gates flaky."""
     csv = Csv("kernel", "size", "steady_ms", "known_bytes",
               "achieved_gbps", "copy_peak_gbps", "frac_of_copy_peak",
-              "frac_of_ref_hbm")
+              "frac_of_ref_hbm", "hlo_model_bytes", "model_vs_known")
     rng = np.random.default_rng(0)
     peak = measure_copy_peak()
 
@@ -94,7 +108,9 @@ def main(n=1 << 20, particle_n=262_144, flux_shape=(256, 256),
     x = jnp.asarray(rng.standard_normal(n, dtype=np.float32))
     y = jnp.asarray(rng.standard_normal(n, dtype=np.float32))
     ms = time_fn(saxpy, 2.0, x, y, use_pallas=False)
-    _row(csv, "saxpy", n, ms, 3 * n * 4, peak)
+    _row(csv, "saxpy", n, ms, 3 * n * 4, peak,
+         _model_bytes(lambda a, b: saxpy(2.0, a, b, use_pallas=False),
+                      x, y))
 
     # -- saxpy (record form: layout-polymorphic storage) --------------------
     from repro.core import Layout, RecordArray
@@ -107,7 +123,9 @@ def main(n=1 << 20, particle_n=262_144, flux_shape=(256, 256),
          "y": jnp.asarray(rng.standard_normal(n, dtype=np.float32))},
         Layout.SOA)
     ms = time_fn(lambda r: saxpy_record(r, 2.0, use_pallas=False).data, rec)
-    _row(csv, "saxpy_record", n, ms, 2 * rec.data.nbytes, peak)
+    _row(csv, "saxpy_record", n, ms, 2 * rec.data.nbytes, peak,
+         _model_bytes(lambda r: saxpy_record(r, 2.0,
+                                             use_pallas=False).data, rec))
 
     # -- particle motion ----------------------------------------------------
     from repro.kernels.particle.ops import PARTICLE_SPEC, particle_update
@@ -121,7 +139,10 @@ def main(n=1 << 20, particle_n=262_144, flux_shape=(256, 256),
         Layout.SOA)
     ms = time_fn(lambda r: particle_update(r, 0.25, use_pallas=False).data,
                  prec)
-    _row(csv, "particle", particle_n, ms, 2 * prec.data.nbytes, peak)
+    _row(csv, "particle", particle_n, ms, 2 * prec.data.nbytes, peak,
+         _model_bytes(lambda r: particle_update(r, 0.25,
+                                                use_pallas=False).data,
+                      prec))
 
     # -- stencil (FORCE flux over the Euler record) -------------------------
     from repro.core import Boundary, pad_boundary_only
@@ -137,7 +158,8 @@ def main(n=1 << 20, particle_n=262_144, flux_shape=(256, 256),
     interior = frec.data.nbytes * math.prod(flux_shape) / \
         math.prod(s + 2 for s in flux_shape)
     _row(csv, "flux", f"{flux_shape[0]}x{flux_shape[1]}", ms,
-         int(frec.data.nbytes + interior), peak)
+         int(frec.data.nbytes + interior), peak,
+         _model_bytes(lambda r: flux_difference(r, 0.1, 0.1).data, frec))
 
     rows = csv.dicts()
     assert peak > 0, "copy-peak measurement failed"

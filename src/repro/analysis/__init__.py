@@ -1,5 +1,7 @@
 """Compiled-HLO analysis: loop-aware FLOPs / bytes / collective census."""
 
-from .hlo import HloCostModel, analyze_hlo, normalize_cost_analysis
+from .hlo import (CandidateCost, CostRanker, HloCostModel, analyze_hlo,
+                  layout_access_penalty, normalize_cost_analysis)
 
-__all__ = ["HloCostModel", "analyze_hlo", "normalize_cost_analysis"]
+__all__ = ["CandidateCost", "CostRanker", "HloCostModel", "analyze_hlo",
+           "layout_access_penalty", "normalize_cost_analysis"]

@@ -479,6 +479,85 @@ class HloCostModel:
         }
 
 
+# -- candidate cost ranking (the measured autotuner's pruning stage) -----------
+#
+# The joint tuner (repro/tuning/search.py) proposes a cross product of
+# per-key layouts x per-kernel tiles plus per-segment layout flips — far
+# more configurations than it can afford to time.  CostRanker turns the
+# HEURISTIC plan's compiled region HLO into a traffic baseline (the true
+# post-fusion bytes the program moves) and ranks each candidate by that
+# baseline plus an analytic penalty the caller derives from the
+# candidate's layout plan (relayout traffic, strided field access).
+# Only the top-ranked candidates are ever measured; the rest are pruned.
+
+# analytic per-access penalty factors on a record's storage bytes: a
+# layout whose fields are interleaved (AoS) reads each field with stride
+# num_components — on vector hardware that wastes a fraction of every
+# cache line / VREG load; AoSoA amortizes the stride over its lane tile;
+# SoA streams each field contiguously.  These are RANKING weights for
+# pruning, not absolute costs — the survivors still get measured.
+LAYOUT_PENALTY_FACTORS = {"AOS": 0.5, "AOSOA": 0.125, "SOA": 0.0}
+
+
+def layout_access_penalty(layout_name: str, storage_bytes: float,
+                          num_fields: int = 2) -> float:
+    """Analytic strided-access penalty bytes for touching one record
+    stored under ``layout_name`` (single-field records pay nothing —
+    every layout stores them contiguously)."""
+    if num_fields <= 1:
+        return 0.0
+    return LAYOUT_PENALTY_FACTORS.get(layout_name, 0.0) * storage_bytes
+
+
+@dataclass(frozen=True)
+class CandidateCost:
+    """One ranked tuning candidate: the shared HLO base traffic plus the
+    candidate's analytic penalty."""
+
+    label: str
+    penalty_bytes: float
+    predicted_bytes: float
+
+    def describe(self) -> str:
+        return (f"{self.label}: predicted {self.predicted_bytes:.3e} B "
+                f"(penalty {self.penalty_bytes:.3e} B)")
+
+
+class CostRanker:
+    """Rank joint (layout x tile) tuning candidates.
+
+    Built from the heuristic plan's compiled region HLO texts
+    (``Executor.region_hlo`` per device region); :meth:`rank` orders
+    candidates by ``base_bytes + penalty_bytes`` ascending, with a
+    STABLE sort so the caller controls tie-breaking by pre-ordering its
+    entries (the tuner orders ties nearest-to-default-tile first).
+    """
+
+    def __init__(self, hlo_texts):
+        self.models = [HloCostModel(t) for t in hlo_texts]
+        self.base_bytes = float(sum(m.bytes_accessed()
+                                    for m in self.models))
+        self.base_flops = float(sum(m.flops() for m in self.models))
+
+    def predict(self, penalty_bytes: float) -> float:
+        """Predicted traffic of one candidate: the heuristic plan's HLO
+        bytes plus the candidate's analytic penalty."""
+        return self.base_bytes + float(penalty_bytes)
+
+    def rank(self, entries) -> list[CandidateCost]:
+        """``entries`` is an iterable of ``(label, penalty_bytes)``;
+        returns :class:`CandidateCost` rows sorted cheapest-first
+        (stable: equal predictions keep the caller's order)."""
+        costs = [CandidateCost(label, float(p), self.predict(p))
+                 for label, p in entries]
+        return sorted(costs, key=lambda c: c.predicted_bytes)
+
+    def describe(self) -> str:
+        return (f"HLO cost base: {self.base_flops:.3e} flops, "
+                f"{self.base_bytes:.3e} bytes over "
+                f"{len(self.models)} device region(s)")
+
+
 def normalize_cost_analysis(cost) -> dict:
     """Normalize ``Compiled.cost_analysis()`` across JAX versions.
 

@@ -622,24 +622,31 @@ def solve_layouts(
     segments,
     tensors: dict[str, DistTensor],
     overrides: Optional[dict[str, Layout]] = None,
+    segment_overrides: Optional[dict[int, dict[str, Layout]]] = None,
 ) -> LayoutPlan:
     """Choose a storage layout per record tensor per segment.
 
     Decision order per tensor (first match wins):
 
-    1. ``overrides`` — a parent executor's already-made choice (loop
-       sub-executors must agree with the enclosing plan);
-    2. ``DistTensor.pin_layout`` — the user's pin;
-    3. the first node-level preference (``TensorArg.layout``) in node
+    1. ``segment_overrides`` — the joint autotuner's PER-SEGMENT choice
+       (segment index -> key -> layout): mixed-segment assignments are
+       value-exact because ``_build_region_fn`` traces the boundary
+       relayouts this plan records;
+    2. ``overrides`` — a plan-uniform forced choice (a parent executor's
+       decision for loop sub-executors, or the tuner's uniform axis);
+    3. ``DistTensor.pin_layout`` — the user's pin;
+    4. the first node-level preference (``TensorArg.layout``) in node
        order, clamped by halo/partition feasibility;
-    4. the tensor's declared layout (clamped the same way).
+    5. the tensor's declared layout (clamped the same way).
 
     Segments are the executor's host-boundary segmentation, so a
     device-only graph is one segment and gets one uniform decision.
     """
     overrides = overrides or {}
+    segment_overrides = segment_overrides or {}
 
-    def choose(nodes) -> dict[str, Layout]:
+    def choose(seg_idx, nodes) -> dict[str, Layout]:
+        seg_over = segment_overrides.get(seg_idx, {})
         hints: dict[str, Layout] = {}
         seen: set[str] = set()
         no_aosoa: set[str] = set()
@@ -664,7 +671,9 @@ def solve_layouts(
         out: dict[str, Layout] = {}
         for name in seen:
             t = tensors[name]
-            if name in overrides:
+            if name in seg_over:
+                out[name] = seg_over[name]
+            elif name in overrides:
                 out[name] = overrides[name]
             elif t.pin_layout:
                 # an infeasible pin is a user error, surfaced at
@@ -685,7 +694,8 @@ def solve_layouts(
                 out[name] = lay
         return out
 
-    per_segment = [choose(list(_segment_nodes(k, p))) for k, p in segments]
+    per_segment = [choose(i, list(_segment_nodes(k, p)))
+                   for i, (k, p) in enumerate(segments)]
 
     plan = LayoutPlan(per_segment=per_segment)
     current: dict[str, Layout] = {}
@@ -902,13 +912,22 @@ def plan_signature(executor: "Executor") -> tuple:
     identical inputs, so their compiled region executables are
     interchangeable.  Tile overrides are part of the key because they
     change the Pallas programs traced into a region executable (the
-    autotuner relies on this: candidate configurations never alias)."""
+    autotuner relies on this: candidate configurations never alias).
+    v3 additionally keys the joint autotuner's per-segment layout
+    overrides explicitly — a per-segment tuned assignment and a
+    plan-uniform one that happen to agree still key identically through
+    the per-segment decision tuples, but a FORCED per-segment override
+    never aliases an unforced plan."""
     plan = executor.plan
-    return ("ripple-plan-v2", executor.schedule, executor.donate,
+    return ("ripple-plan-v3", executor.schedule, executor.donate,
             _mesh_sig(executor.mesh), _segments_sig(executor._segments),
             tuple(tuple(sorted((n, l.name) for n, l in seg.items()))
                   for seg in plan.per_segment),
             tuple(sorted((n, l.name) for n, l in plan.initial.items())),
+            tuple(sorted(
+                (si, n, l.name)
+                for si, d in executor._segment_overrides.items()
+                for n, l in d.items())),
             tuple(sorted((str(k), _sig_value(v))
                          for k, v in executor._tile_config.items())))
 
@@ -1091,18 +1110,30 @@ class Executor:
       cache when one exists for this plan signature × device × jax
       version; fall back to heuristics on a miss (never measures —
       safe for latency-sensitive construction paths);
-    * ``"auto"`` — like ``"load"``, but on a cache miss benchmark
-      candidate configurations (per-key halo-feasible layouts × per-
-      kernel ``tile_candidates()``) with real timed executions of the
-      region executables, commit the argmin into the plan, and persist
-      it, so the *next* construction — this process or another — pays
-      zero measurements.
+    * ``"auto"`` — like ``"load"``, but on a cache miss run the JOINT
+      search: propose the cross product of per-key halo-feasible
+      layouts × per-kernel ``tile_candidates()`` (plus per-segment
+      layout refinements), rank every proposal with the HLO cost model
+      so only the cheapest fraction is ever measured, time the
+      survivors with real executions of the region executables (each
+      candidate's timing loop stops early once it is statistically
+      dominated), commit the argmin into the plan, and persist it, so
+      the *next* construction — this process or another — pays zero
+      measurements.
 
-    ``plan.describe_tuning()`` renders the decision;
-    ``tile_overrides`` forces specific kernel tiles (kernel name ->
-    tile config, what the tuner itself uses to stage candidates), and
-    ``tune_inputs`` optionally supplies ``init_state`` overrides for
-    the tuner's timed executions so measurement runs on realistic data.
+    ``tune_budget`` bounds the ``"auto"`` search — a
+    ``repro.tuning.TuneBudget`` (or a dict of its fields): the fraction
+    of proposals measured, the early-stop domination factor, and how
+    many consecutive non-improving candidates end the search.
+    ``plan.describe_tuning()`` renders the decision, including the
+    proposed / pruned / measured counts and any per-segment layout
+    assignments; ``tile_overrides`` forces specific kernel tiles
+    (kernel name -> tile config, what the tuner itself uses to stage
+    candidates); ``segment_layout_overrides`` pins layouts for
+    individual segments (segment index -> key -> layout, the tuner's
+    per-segment decision axis); and ``tune_inputs`` optionally supplies
+    ``init_state`` overrides for the tuner's timed executions so
+    measurement runs on realistic data.
 
     Example::
 
@@ -1117,8 +1148,11 @@ class Executor:
                  schedule: str = "dag", regions: bool = True,
                  async_regions: bool = True,
                  tune: str = "off",
+                 tune_budget: Optional[Any] = None,
                  tile_overrides: Optional[dict[str, Any]] = None,
                  tune_inputs: Optional[dict[str, Any]] = None,
+                 segment_layout_overrides: Optional[
+                     dict[int, dict[str, Layout]]] = None,
                  host_timeout: Optional[float] = None,
                  degrade: bool = True,
                  demote_after: int = 2, promote_after: int = 8):
@@ -1158,6 +1192,9 @@ class Executor:
         self._cfg_schedule = schedule
         self._cfg_async = bool(async_regions)
         self._user_layout_overrides = dict(layout_overrides or {})
+        self._user_segment_overrides = {
+            int(i): dict(v)
+            for i, v in (segment_layout_overrides or {}).items()}
         self._user_tile_config = dict(tile_overrides or {})
         self.ladder_level = 0
         self._site_failures: dict[str, int] = {}
@@ -1169,18 +1206,26 @@ class Executor:
             ax is not None for t in self.tensors.values()
             for ax in t.partition)
         self._layout_overrides = dict(layout_overrides or {})
+        self._segment_overrides = {
+            int(i): dict(v)
+            for i, v in (segment_layout_overrides or {}).items()}
         self._tile_config = dict(tile_overrides or {})
         self._tune_inputs = dict(tune_inputs or {})
+        self._tune_budget = tune_budget
         self._build_plan()
         if tune != "off":
             from ..tuning.search import resolve_tuning
 
-            decision = resolve_tuning(self, tune)
+            decision = resolve_tuning(self, tune, budget=tune_budget)
             if decision.applied:
                 # rebuild the plan under the measured-best configuration
                 # (relayout steps, halo schedule, signature and cache
-                # entry all follow the tuned layouts/tiles)
+                # entry all follow the tuned layouts/tiles — including
+                # the per-segment assignments of the joint search)
                 self._layout_overrides.update(decision.layouts)
+                for si, d in decision.segment_layouts.items():
+                    self._segment_overrides.setdefault(
+                        int(si), {}).update(d)
                 self._tile_config.update(decision.tiles)
                 self._build_plan()
             self.plan.tuning = decision
@@ -1220,25 +1265,36 @@ class Executor:
             else dict(self._user_layout_overrides)
         want_tiles = dict(self._tile_config) if level < 3 \
             else dict(self._user_tile_config)
+        want_seg = {i: dict(v) for i, v in (
+            self._segment_overrides if level < 3
+            else self._user_segment_overrides).items()}
         rebuild = (want_schedule != self.schedule
                    or want_overrides != self._layout_overrides
-                   or want_tiles != self._tile_config)
+                   or want_tiles != self._tile_config
+                   or want_seg != self._segment_overrides)
         if level >= 3:
             # drop the tuned configuration (keep it recoverable for
             # re-promotion in _tuned_layouts/_tuned_tiles)
             self._tuned_layouts = dict(self._layout_overrides)
             self._tuned_tiles = dict(self._tile_config)
+            self._tuned_segment_overrides = {
+                i: dict(v) for i, v in self._segment_overrides.items()}
         elif getattr(self, "_tuned_layouts", None) is not None:
             want_overrides = dict(self._tuned_layouts)
             want_tiles = dict(self._tuned_tiles)
-            rebuild = rebuild or want_overrides != self._layout_overrides
+            want_seg = {i: dict(v) for i, v in
+                        self._tuned_segment_overrides.items()}
+            rebuild = rebuild or want_overrides != self._layout_overrides \
+                or want_seg != self._segment_overrides
             self._tuned_layouts = None
             self._tuned_tiles = None
+            self._tuned_segment_overrides = None
         if rebuild:
             tuning = self.plan.tuning
             self._apply_schedule(want_schedule)
             self._layout_overrides = want_overrides
             self._tile_config = want_tiles
+            self._segment_overrides = want_seg
             self._build_plan()
             self.plan.tuning = tuning
 
@@ -1296,7 +1352,8 @@ class Executor:
         construction, and a second time when the autotuner commits a
         configuration that differs from the heuristics."""
         self.plan = solve_layouts(self._segments, self.tensors,
-                                  overrides=self._layout_overrides)
+                                  overrides=self._layout_overrides,
+                                  segment_overrides=self._segment_overrides)
         self.plan.dag = self.dag
         # physical layout of each record tensor's state entry right now
         self._state_layouts: dict[str, Layout] = dict(self.plan.initial)

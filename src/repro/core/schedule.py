@@ -307,6 +307,22 @@ class ScheduleDag:
                         lines.append(
                             f"  region {e.src} -> region {e.dst} "
                             f"({e.reason}{via})")
+            tuning = getattr(plan, "tuning", None)
+            if tuning is not None:
+                seg_layouts = getattr(tuning, "segment_layouts", {}) or {}
+                for si in sorted(seg_layouts):
+                    for name in sorted(seg_layouts[si]):
+                        lines.append(
+                            f"tuned segment {si}: {name} -> "
+                            f"{seg_layouts[si][name].name} "
+                            f"(per-segment joint-search decision)")
+                proposed = getattr(tuning, "proposed", 0)
+                if proposed:
+                    lines.append(
+                        f"tuner search space: {proposed} proposed, "
+                        f"{getattr(tuning, 'pruned', 0)} pruned by HLO "
+                        f"cost ranking, {getattr(tuning, 'measured', 0)} "
+                        f"measured")
             if getattr(plan, "signature", ""):
                 cache = getattr(plan, "cache", None)
                 line = f"plan signature {plan.signature}"

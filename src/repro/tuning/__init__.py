@@ -4,10 +4,12 @@ Turns the layout solver's static heuristics and the kernels' fixed tile
 defaults into *measured* decisions (HONEI's per-architecture tuned
 backends, CrystalGPU's transparent execution-parameter selection):
 
-* :mod:`repro.tuning.search` — the search driver: times candidate
-  (layout × tile) configurations as real executions of the plan's
-  region executables and commits the argmin
-  (``Executor(tune="auto")``);
+* :mod:`repro.tuning.search` — the search driver: proposes the JOINT
+  (per-key layout × per-kernel tile) candidate space (plus per-segment
+  layout refinements), prunes it with the HLO cost model, times the
+  surviving candidates as real executions of the plan's region
+  executables under a :class:`~repro.tuning.search.TuneBudget`, and
+  commits the argmin (``Executor(tune="auto", tune_budget=...)``);
 * :mod:`repro.tuning.cache` — the persistent on-disk cache
   (``~/.cache/repro-tune`` or ``$REPRO_TUNE_CACHE``), keyed by plan
   signature × device kind × jax version, so a second process loads
@@ -27,22 +29,25 @@ from .cache import cache_dir, cache_path, clear_memo, tuning_lock
 from .tiles import (active_tiles, record_tile_use, register_tile_kernel,
                     registered_tile_kernels, resolve_tile, tile_candidates,
                     tile_scope)
-from .timing import time_fn, time_fn_split
+from .tiles import tile_distance
+from .timing import time_fn, time_fn_budget, time_fn_split
 
 __all__ = [
     "cache", "tiles", "timing",
     "cache_dir", "cache_path", "clear_memo", "tuning_lock",
     "active_tiles", "record_tile_use", "register_tile_kernel",
     "registered_tile_kernels", "resolve_tile", "tile_candidates",
-    "tile_scope",
-    "time_fn", "time_fn_split",
+    "tile_distance", "tile_scope",
+    "time_fn", "time_fn_budget", "time_fn_split",
     # lazy (search imports repro.core):
-    "Measurement", "TuningDecision", "STATS", "reset_stats",
-    "resolve_tuning", "measure_plan", "tuning_key", "search",
+    "Measurement", "TuneBudget", "TuningDecision", "STATS", "reset_stats",
+    "resolve_tuning", "measure_plan", "tuning_key", "legacy_tuning_key",
+    "search",
 ]
 
-_LAZY = {"Measurement", "TuningDecision", "STATS", "reset_stats",
-         "resolve_tuning", "measure_plan", "tuning_key", "search"}
+_LAZY = {"Measurement", "TuneBudget", "TuningDecision", "STATS",
+         "reset_stats", "resolve_tuning", "measure_plan", "tuning_key",
+         "legacy_tuning_key", "search"}
 
 
 def __getattr__(name: str):

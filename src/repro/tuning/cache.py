@@ -41,10 +41,21 @@ from contextlib import contextmanager
 from pathlib import Path
 from typing import Any, Optional
 
-__all__ = ["SCHEMA_VERSION", "cache_dir", "cache_path", "device_assortment",
-           "load", "store", "clear_memo", "tuning_lock"]
+__all__ = ["SCHEMA_VERSION", "LEGACY_SCHEMA_VERSION", "cache_dir",
+           "cache_path", "device_assortment", "load", "store", "clear_memo",
+           "tuning_lock"]
 
-SCHEMA_VERSION = 1
+#: Current on-disk schema.  v3 entries carry the joint tuner's
+#: per-segment layout assignments and proposed/pruned/measured counts.
+#: (Schema 2 never shipped; the pre-joint coordinate tuner wrote
+#: schema 1 under ``repro-tune-v2`` keys.)
+SCHEMA_VERSION = 3
+
+#: Schema written by the v2 coordinate-descent tuner.  ``search.py``
+#: migration-reads these (``load(key, schema=LEGACY_SCHEMA_VERSION)``)
+#: and re-persists feasible decisions under the v3 key without
+#: re-measurement.
+LEGACY_SCHEMA_VERSION = 1
 
 # in-process memo: key -> validated payload (None entries are not memoized
 # so a file written later in the process is still picked up)
@@ -91,14 +102,14 @@ def device_assortment() -> tuple:
             procs)
 
 
-def _validate(payload: Any, key: str) -> dict:
+def _validate(payload: Any, key: str, schema: int = SCHEMA_VERSION) -> dict:
     """Raise ``ValueError`` unless ``payload`` is a well-formed entry for
-    ``key`` at the current schema version."""
+    ``key`` at schema version ``schema``."""
     if not isinstance(payload, dict):
         raise ValueError("payload is not an object")
-    if payload.get("schema") != SCHEMA_VERSION:
+    if payload.get("schema") != schema:
         raise ValueError(f"schema {payload.get('schema')!r} != "
-                         f"{SCHEMA_VERSION}")
+                         f"{schema}")
     if payload.get("key") != key:
         raise ValueError("key mismatch")
     for field in ("layouts", "tiles"):
@@ -109,15 +120,19 @@ def _validate(payload: Any, key: str) -> dict:
     return payload
 
 
-def load(key: str) -> Optional[dict]:
+def load(key: str, schema: int = SCHEMA_VERSION) -> Optional[dict]:
     """The cached payload for ``key``, or None (miss).
 
-    A corrupt or schema-incompatible file warns ONCE per process and
-    reads as a miss — the caller falls back to heuristics (``load``
-    mode) or re-measures and overwrites (``auto`` mode)."""
+    ``schema`` selects which version validates — the default is the
+    current one; ``search.py`` passes ``LEGACY_SCHEMA_VERSION`` when
+    migration-reading a v2 coordinate-tuner entry.  A corrupt or
+    schema-incompatible file warns ONCE per process and reads as a miss
+    — the caller falls back to heuristics (``load`` mode) or
+    re-measures and overwrites (``auto`` mode).  A legacy-schema read
+    that misses stays silent (the old entry simply never existed)."""
     memo = _MEMO.get(key)
     if memo is not None:
-        return memo
+        return memo if memo.get("schema") == schema else None
     path = cache_path(key)
     _corrupt_if_scheduled(path)
     try:
@@ -128,9 +143,10 @@ def load(key: str) -> Optional[dict]:
         _warn_once(path, f"unreadable ({exc})")
         return None
     try:
-        payload = _validate(json.loads(text), key)
+        payload = _validate(json.loads(text), key, schema=schema)
     except (ValueError, TypeError) as exc:
-        _warn_once(path, str(exc))
+        if schema == SCHEMA_VERSION:
+            _warn_once(path, str(exc))
         return None
     _MEMO[key] = payload
     return payload

@@ -32,6 +32,7 @@ __all__ = [
     "register_tile_kernel",
     "registered_tile_kernels",
     "tile_candidates",
+    "tile_distance",
     "resolve_tile",
     "tile_scope",
     "active_tiles",
@@ -88,6 +89,28 @@ def tile_candidates(kernel: str, shape) -> tuple:
     if fn is None:
         return ()
     return tuple(_norm(t) for t in fn(tuple(shape)))
+
+
+def tile_distance(tile, default) -> float:
+    """Deterministic distance between a tile config and a kernel's
+    default: the sum of ``|log2(t / d)|`` over numeric components (nested
+    configs recurse; non-numeric components contribute 0 when equal, 1
+    when not).  The joint autotuner uses it to order candidates
+    near-default-first, so its HLO cost ranking breaks ties toward the
+    configurations most likely to behave like the measured baseline."""
+    import math
+
+    tile, default = _norm(tile), _norm(default)
+    if isinstance(tile, tuple) or isinstance(default, tuple):
+        ts = tile if isinstance(tile, tuple) else (tile,)
+        ds = default if isinstance(default, tuple) else (default,)
+        if len(ts) != len(ds):
+            return float(max(len(ts), len(ds)))
+        return sum(tile_distance(t, d) for t, d in zip(ts, ds))
+    if isinstance(tile, (int, float)) and isinstance(default, (int, float)) \
+            and tile > 0 and default > 0:
+        return abs(math.log2(tile / default))
+    return 0.0 if tile == default else 1.0
 
 
 def resolve_tile(kernel: str, explicit, default, shape=None):

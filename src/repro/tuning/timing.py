@@ -15,7 +15,7 @@ import time
 
 import jax
 
-__all__ = ["time_fn", "time_fn_split"]
+__all__ = ["time_fn", "time_fn_split", "time_fn_budget"]
 
 
 def time_fn_split(fn, *args, iters: int = 5, warmup: int = 2,
@@ -38,6 +38,34 @@ def time_fn_split(fn, *args, iters: int = 5, warmup: int = 2,
         times.append((time.perf_counter() - t0) * 1e3)
     times.sort()
     return first, times[len(times) // 2]
+
+
+def time_fn_budget(fn, *args, iters: int = 5, warmup: int = 2,
+                   min_iters: int = 2, stop_above_ms=None,
+                   **kw) -> tuple[float, float, int, bool]:
+    """``(first_ms, steady_ms, iters_run, dominated)`` — like
+    :func:`time_fn_split`, but the steady-state loop stops early once the
+    candidate is statistically dominated: after ``min_iters`` timed
+    calls, if the RUNNING median already exceeds ``stop_above_ms`` the
+    remaining iterations are skipped (``dominated=True``) — the joint
+    autotuner's per-candidate measurement budget.  ``stop_above_ms=None``
+    reproduces :func:`time_fn_split` exactly."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args, **kw))
+    first = (time.perf_counter() - t0) * 1e3
+    for _ in range(max(warmup - 1, 0)):
+        jax.block_until_ready(fn(*args, **kw))
+    times: list[float] = []
+    dominated = False
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append((time.perf_counter() - t0) * 1e3)
+        if (stop_above_ms is not None and len(times) >= max(min_iters, 1)
+                and sorted(times)[len(times) // 2] > stop_above_ms):
+            dominated = True
+            break
+    return first, sorted(times)[len(times) // 2], len(times), dominated
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:

@@ -19,10 +19,30 @@ import numpy as np
 from repro.core import (Boundary, DistTensor, ExecutionKind, Graph, Layout,
                         MaxReducer, RecordArray, RecordSpec, SumReducer,
                         concurrent_padded_access, make_reduction_result)
+from repro.tuning.tiles import register_tile_kernel, resolve_tile
 
 SPEC = RecordSpec.create("x", "y")
 NX, NY = 16, 12
 N_SCALARS = 3
+
+# the generated graphs' tunable tile site (tile_sites=True): a record
+# saxpy blocked over the leading space dim.  Every candidate divides NX,
+# and the op is elementwise after a reshape-into-blocks, so results are
+# bitwise identical across block sizes — the tuner conformance tests
+# rely on exactly that.
+register_tile_kernel(
+    "genrec", lambda shape: tuple(b for b in (2, 4, 8, 16)
+                                  if shape[0] % b == 0))
+
+
+def _tiled_rec(cc):
+    def fn(r):
+        b = resolve_tile("genrec", None, NX, shape=(NX,))
+        x, y = r.field("x"), r.field("y")
+        xb = x.reshape((x.shape[0] // b, b) + x.shape[1:])
+        yb = y.reshape((y.shape[0] // b, b) + y.shape[1:])
+        return r.set_field("y", (cc * xb + yb).reshape(y.shape))
+    return fn
 
 
 def _host_noop(x):
@@ -51,7 +71,8 @@ def _stencil(s, _d):
 
 
 def build_random_graph(seed: int, layout: Layout, partition=(), *,
-                       host_callbacks: bool = False):
+                       host_callbacks: bool = False,
+                       tile_sites: bool = False):
     """A 2-4 level graph, 1-3 nodes per level, drawn from the pool
     {scalar saxpy, 2-d stencil, reduce, record saxpy, result broadcast}.
 
@@ -61,6 +82,12 @@ def build_random_graph(seed: int, layout: Layout, partition=(), *,
     event-driven dispatcher on exactly these graphs.  The extra draws
     happen only when enabled, so ``host_callbacks=False`` graphs are
     bit-identical to what this generator always produced for a seed.
+
+    With ``tile_sites=True`` the record-saxpy nodes route through the
+    ``"genrec"`` tunable tile site (same rng draws — the graph structure
+    per seed is unchanged; only the node body differs), which gives the
+    tuner conformance tests a real tile axis whose block size provably
+    cannot change values.
 
     Returns ``(graph, overrides, state_keys)``: pass ``overrides`` to
     ``Executor.init_state`` (fresh arrays each call — donation-safe) and
@@ -97,9 +124,12 @@ def build_random_graph(seed: int, layout: Layout, partition=(), *,
                          rng.choice([SumReducer(), MaxReducer()]))
             elif kind == "rec":
                 c = round(rng.uniform(0.5, 2.0), 3)
-                g.split((lambda cc: lambda r: r.set_field(
-                    "y", cc * r.field("x") + r.field("y")))(c),
-                    rec, writes=(0,))
+                if tile_sites:
+                    g.split(_tiled_rec(c), rec, writes=(0,))
+                else:
+                    g.split((lambda cc: lambda r: r.set_field(
+                        "y", cc * r.field("x") + r.field("y")))(c),
+                        rec, writes=(0,))
             elif results:  # result_add: broadcast a reduction back in
                 res = rng.choice(results)
                 i = rng.randrange(N_SCALARS)

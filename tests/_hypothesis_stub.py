@@ -6,7 +6,7 @@ each ``@given`` test over a deterministic pseudo-random sample of the
 strategy space (seeded per test name, so failures reproduce).
 
 Only the strategy surface this repo uses is implemented: ``integers``,
-``floats``, ``sampled_from``, ``lists``, ``text``.  Shrinking, the
+``floats``, ``sampled_from``, ``booleans``, ``lists``, ``text``.  Shrinking, the
 database, and ``@example`` are out of scope — install hypothesis for the
 real thing.
 """
@@ -43,6 +43,10 @@ def floats(min_value, max_value, **_kw):
 def sampled_from(elements):
     elements = list(elements)
     return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
 
 
 def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=10):
@@ -110,7 +114,8 @@ def install() -> None:
     mod.settings = settings
     mod.__version__ = __version__
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "sampled_from", "lists", "text"):
+    for name in ("integers", "floats", "sampled_from", "booleans", "lists",
+                 "text"):
         setattr(st, name, globals()[name])
     mod.strategies = st
     sys.modules["hypothesis"] = mod

@@ -166,9 +166,13 @@ def test_tuned_kernel_tiles_apply_and_preserve_values():
     g, r = _kernel_graph()
     ex = Executor(g, donate=False, tune="auto")
     dec = ex.plan.tuning
-    # the saxpy kernel was consulted during the probe, so the tile axis
-    # was searched (whether or not a non-default tile won)
-    assert any(m.kind == "tile" and m.key == "saxpy"
+    # the saxpy kernel was consulted during the probe, so its tile axis
+    # entered the joint search space (3 layouts x 5 tiles), and at least
+    # one measured joint candidate carries a saxpy tile
+    assert dec.proposed >= 15
+    assert dec.measured >= 2
+    assert dec.proposed == dec.pruned + dec.measured
+    assert any(m.kind == "joint" and "saxpy=" in m.candidate
                for m in dec.measurements)
     base = Executor(g, donate=False)
     s0 = base.run(base.init_state(), 2)
@@ -333,6 +337,106 @@ print("SUBPROCESS-OK")
     # the subprocess applied the SAME decision this process measured
     want = sorted((k, v.name) for k, v in ex.plan.tuning.layouts.items())
     assert f"SUBPROCESS-LAYOUTS: {want}" in out.stdout
+
+
+# -- v2 -> v3 migration --------------------------------------------------------
+
+
+def _write_legacy_entry(key, layouts, tiles, measurements=()):
+    """Hand-craft a schema-1 entry exactly as the v2 coordinate tuner
+    persisted it."""
+    path = tune_cache.cache_path(key)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps({
+        "schema": 1, "key": key, "layouts": layouts, "tiles": tiles,
+        "baseline_ms": 1.0, "tuned_ms": 0.5,
+        "measurements": list(measurements)}))
+
+
+def test_v2_entry_migrates_to_v3_without_remeasure():
+    g, p = _record_graph(name="pg")
+    probe = Executor(g, donate=False)
+    v2key = tune_search.legacy_tuning_key(probe)
+    v3key = tune_search.tuning_key(probe)
+    _write_legacy_entry(v2key, {"pg": "SOA"}, {})
+
+    ex = Executor(g, donate=False, tune="auto")
+    dec = ex.plan.tuning
+    assert dec.source == "migrated"
+    assert dec.layouts == {"pg": Layout.SOA}
+    assert tune_search.STATS["measurements"] == 0     # zero re-measurement
+    assert tune_search.STATS["migrations"] == 1
+    # the decision was re-keyed and re-persisted under the v3 schema
+    v3 = json.loads(tune_cache.cache_path(v3key).read_text())
+    assert v3["schema"] == tune_cache.SCHEMA_VERSION
+    assert v3["key"] == v3key
+    # and it really applied: every segment stores p as SOA
+    assert all(seg["pg"] is Layout.SOA for seg in ex.plan.per_segment
+               if "pg" in seg)
+
+    # second construction: a plain v3 cache hit, no second migration
+    ex2 = Executor(g, donate=False, tune="auto")
+    assert ex2.plan.tuning.source == "cache"
+    assert tune_search.STATS["migrations"] == 1
+    assert tune_search.STATS["measurements"] == 0
+
+
+def test_infeasible_v2_entry_warns_once_and_retunes():
+    g, p = _record_graph(name="ph")
+    probe = Executor(g, donate=False)
+    v2key = tune_search.legacy_tuning_key(probe)
+    # a layout decision for a key this plan cannot search, and a tile
+    # decision for a kernel with no registered hook: both infeasible
+    _write_legacy_entry(v2key, {"nosuchkey": "SOA"},
+                        {"nosuchkernel": 4})
+
+    with pytest.warns(RuntimeWarning, match="no longer feasible"):
+        ex = Executor(g, donate=False, tune="auto")
+    assert ex.plan.tuning.source == "measured"        # fresh tuning
+    assert tune_search.STATS["measurements"] > 0
+    assert tune_search.STATS["migrations"] == 0
+
+    # the warning does NOT repeat on the next construction (which now
+    # hits the freshly measured v3 entry anyway)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ex2 = Executor(g, donate=False, tune="auto")
+    assert ex2.plan.tuning.source == "cache"
+
+
+def test_v2_migration_applies_in_subprocess(tmp_path):
+    """The serving pattern across the schema bump: a process holding
+    only a v2 cache entry constructs with tune="auto" in a fresh
+    interpreter and must apply the migrated decision with ZERO timed
+    measurements."""
+    from _tuning_workload import make_graph
+
+    g = make_graph()
+    probe = Executor(g, donate=False)
+    v2key = tune_search.legacy_tuning_key(probe)
+    _write_legacy_entry(v2key, {"px": "SOA"}, {})
+
+    code = """
+from _tuning_workload import make_graph
+from repro.core import Executor, Layout
+from repro.tuning import search as tune_search
+
+ex = Executor(make_graph(), donate=False, tune="auto")
+assert ex.plan.tuning.source == "migrated", ex.plan.tuning.source
+assert tune_search.STATS["measurements"] == 0, tune_search.STATS
+assert tune_search.STATS["migrations"] == 1, tune_search.STATS
+assert ex.plan.tuning.layouts == {"px": Layout.SOA}
+print("SUBPROCESS-MIGRATED-OK")
+"""
+    env = dict(os.environ)
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(here), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here, env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"
+    assert "SUBPROCESS-MIGRATED-OK" in out.stdout
 
 
 def test_atomic_store_and_memo_roundtrip():
